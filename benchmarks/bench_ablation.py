@@ -1,0 +1,42 @@
+"""Fig 19 / Table VI: per-optimization impact.
+
+Starting from the full Opt configuration, disable one optimization at a
+time and report the slowdown — the paper's additive analysis inverted
+(theirs adds optimizations; ours removes them, which isolates each pass's
+marginal contribution under composition).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import CompiledQuery, preset
+from repro.relational.queries import QUERIES
+
+from benchmarks.common import csv, db, time_compiled
+
+ABLATIONS = {
+    "no_partitioning": {"partitioning": False},
+    "no_dense_agg": {"dense_agg": False},
+    "no_date_index": {"date_index": False},
+    "no_string_dict": {"string_dict": False},
+    "no_column_pruning": {"column_pruning": False},
+    "no_hoist": {"hoist": False},
+    "no_cse": {"cse": False},
+    "no_fusion": {"fusion": False},
+    "with_row_layout": {"layout": "row"},
+}
+
+
+def run(out=print, queries=None) -> dict:
+    queries = queries or sorted(QUERIES)
+    results: dict[str, dict[str, float]] = {}
+    for qname in queries:
+        base = time_compiled(CompiledQuery(QUERIES[qname](), db(), preset("opt")))
+        results[qname] = {"opt": base}
+        out(csv(f"ablation/{qname}/opt", base))
+        for name, overrides in ABLATIONS.items():
+            settings = dataclasses.replace(preset("opt"), **overrides)
+            t = time_compiled(CompiledQuery(QUERIES[qname](), db(), settings))
+            results[qname][name] = t
+            out(csv(f"ablation/{qname}/{name}", t, f"{t / base:.2f}x"))
+    return results

@@ -1,0 +1,28 @@
+"""Fig 22 / Table VII: compilation overheads per query (Opt config).
+
+Splits the cost the way the paper does: SC-analogue optimization time
+(pass pipeline + staging/collection walk) vs backend code generation
+(XLA lower + compile).  Paper claim: ≲1.2 s per query end to end.
+"""
+from __future__ import annotations
+
+from repro.core import CompiledQuery, preset
+from repro.relational.queries import QUERIES
+
+from benchmarks.common import csv, db
+
+
+def run(out=print) -> dict:
+    results = {}
+    for qname in sorted(QUERIES):
+        cq = CompiledQuery(QUERIES[qname](), db(), preset("opt"))
+        cq.compile()
+        r = {"passes": cq.pass_time, "staging": cq.stage_time,
+             "xla_lower": cq.lower_time, "xla_compile": cq._compile_time}
+        results[qname] = r
+        total = sum(r.values())
+        out(csv(f"compile/{qname}/passes", r["passes"]))
+        out(csv(f"compile/{qname}/staging", r["staging"]))
+        out(csv(f"compile/{qname}/xla", r["xla_lower"] + r["xla_compile"]))
+        out(csv(f"compile/{qname}/total", total))
+    return results

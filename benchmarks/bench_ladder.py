@@ -1,0 +1,35 @@
+"""Fig 16/17 / Table V: the engine ladder.
+
+DBX (interpreted volcano) -> Naive (whole-query jit, no domain passes) ->
+Template (per-operator fusion barriers ~ HyPer scope) -> TPC-H
+(+partitioning) -> StrDict -> Opt (all passes).  Reports seconds per query
+per config and the speedup of Opt over DBX / Naive.
+"""
+from __future__ import annotations
+
+from repro.relational.queries import QUERIES
+
+from benchmarks.common import csv, time_config
+
+CONFIGS = ["dbx", "naive", "template", "tpch", "strdict", "opt"]
+
+
+def run(out=print) -> dict:
+    results: dict[str, dict[str, float]] = {}
+    for qname in sorted(QUERIES):
+        results[qname] = {}
+        for config in CONFIGS:
+            t = time_config(qname, config)
+            results[qname][config] = t
+            out(csv(f"ladder/{qname}/{config}", t))
+    for qname, row in results.items():
+        out(csv(f"ladder/{qname}/speedup_opt_vs_dbx", row["opt"],
+                f"{row['dbx'] / row['opt']:.1f}x"))
+        out(csv(f"ladder/{qname}/speedup_opt_vs_naive", row["opt"],
+                f"{row['naive'] / row['opt']:.1f}x"))
+    geo = 1.0
+    for row in results.values():
+        geo *= row["dbx"] / row["opt"]
+    geo **= 1.0 / len(results)
+    out(csv("ladder/geomean_speedup_opt_vs_dbx", 0.0, f"{geo:.1f}x"))
+    return results

@@ -1,0 +1,30 @@
+"""Fig 21 / Table VII: loading-time overhead of the load-time structures
+(string dictionaries incl. word tokenization, FK partitions, date
+clusters).  Paper claim: ≤ ~1.5x slowdown (≈1.88x incl. word-token dicts).
+"""
+from __future__ import annotations
+
+from repro.relational.loader import loading_cost
+
+from benchmarks.common import csv, db
+
+
+def run(out=print) -> dict:
+    d = db()
+    d.reset_aux()
+    base = loading_cost(d, string_dict=False, partition=False,
+                        date_index=False) + 1e-9
+    t_dict = loading_cost(d, string_dict=True, partition=False,
+                          date_index=False)
+    d.reset_aux()
+    t_part = loading_cost(d, string_dict=False, partition=True,
+                          date_index=False)
+    t_date = loading_cost(d, string_dict=False, partition=False,
+                          date_index=True)
+    results = {"base": base, "string_dict": t_dict, "partition": t_part,
+               "date_index": t_date}
+    out(csv("loading/string_dict", t_dict))
+    out(csv("loading/partition", t_part))
+    out(csv("loading/date_index", t_date))
+    out(csv("loading/total_aux", t_dict + t_part + t_date))
+    return results

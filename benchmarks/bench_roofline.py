@@ -1,0 +1,56 @@
+"""Roofline table from the dry-run JSON cache (results/dryrun/*.json).
+
+Run `PYTHONPATH=src python -m repro.launch.dryrun --all` first (the dry-run
+needs its own process: it forces 512 host devices before jax init).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def markdown_table(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | roofline frac | useful/HLO | bytes/dev |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        mem = c.get("memory", {}) or {}
+        arg = (mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['compute_s']:.4f} | {c['memory_s']:.4f} "
+            f"| {c['collective_s']:.4f} "
+            f"| {c['bottleneck'].replace('_s', '')} "
+            f"| {c['roofline_fraction']:.3f} "
+            f"| {min(c['useful_flops_ratio'], 99.0):.2f} "
+            f"| {arg / 1e9:.1f}GB |")
+    return "\n".join(rows)
+
+
+def run(out=print) -> list[dict]:
+    cells = load_cells()
+    if not cells:
+        out(csv("roofline/no_dryrun_cache", 0.0,
+                "run repro.launch.dryrun --all first"))
+        return cells
+    for c in cells:
+        out(csv(f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+                c["bound_s"],
+                f"bottleneck={c['bottleneck'].replace('_s', '')} "
+                f"frac={c['roofline_fraction']:.3f}"))
+    out(csv("roofline/cells_total", 0.0, str(len(cells))))
+    return cells

@@ -1,0 +1,44 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Environment knobs:
+  REPRO_SF       TPC-H scale factor (default 0.05)
+  REPRO_REPEATS  timing repeats (default 5)
+  REPRO_QUICK=1  ladder/ablation on a query subset
+"""
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation, bench_compile, bench_kernels,
+                            bench_ladder, bench_loading, bench_memory,
+                            bench_roofline)
+
+    quick = os.environ.get("REPRO_QUICK") == "1"
+    print("name,us_per_call,derived")
+    bench_kernels.run()
+    bench_loading.run()
+    bench_memory.run()
+    bench_compile.run()
+    if quick:
+        import benchmarks.common as C
+        from repro.relational import queries as Q
+        keep = {"q1", "q3", "q6", "q12"}
+        full = dict(Q.QUERIES)
+        Q.QUERIES.clear()
+        Q.QUERIES.update({k: v for k, v in full.items() if k in keep})
+        try:
+            bench_ladder.run()
+            bench_ablation.run()
+        finally:
+            Q.QUERIES.clear()
+            Q.QUERIES.update(full)
+    else:
+        bench_ladder.run()
+        bench_ablation.run()
+    bench_roofline.run()
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end training driver: train a small qwen-family model on the
+synthetic pipeline with the fault-tolerant driver + async checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200 [--arch qwen1_5_0_5b]
+
+With --steps 200 on CPU this trains a ~3M-param reduced config and prints
+the loss curve (which should fall from ~ln(vocab)).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.models import Ctx, init_params
+from repro.runtime.fault_tolerance import TrainDriver
+from repro.train.optimizer import AdamConfig
+from repro.train.train_step import make_train_state, train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--compression", action="store_true",
+                    help="int8 gradient compression with error feedback")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    cfg = dataclasses.replace(cfg, n_layers=max(cfg.n_layers, 2))
+    ctx = Ctx(mesh=None)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.2f}M")
+
+    state = make_train_state(params, compression=args.compression)
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=args.batch, seq_len=args.seq,
+                         structured=True)
+    stepper = jax.jit(lambda st, b: train_step(
+        st, {k: jnp.asarray(v) for k, v in b.items()}, cfg, ctx,
+        AdamConfig(lr=3e-4, warmup=20)))
+
+    drv = TrainDriver(step_fn=stepper, state=state, pipeline=pipe,
+                      ckpt_dir=args.ckpt, ckpt_every=50)
+    drv.run(args.steps)
+    log = drv.metrics_log
+    for m in log[:: max(1, len(log) // 10)]:
+        print(f"step {m['step']:>5}  loss {m['loss']:.4f}  "
+              f"{m['dt'] * 1e3:.0f} ms")
+    print(f"final loss {log[-1]['loss']:.4f} "
+          f"(init ~{jnp.log(cfg.vocab):.2f}); stragglers: "
+          f"{len(drv.straggler.slow_steps)}")
+
+
+if __name__ == "__main__":
+    main()

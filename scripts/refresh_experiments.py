@@ -1,0 +1,24 @@
+"""Refresh the generated tables inside EXPERIMENTS.md from results/."""
+import subprocess
+import sys
+
+subprocess.run([sys.executable, "scripts/make_tables.py"], check=True)
+exp = open("EXPERIMENTS.md").read()
+
+
+def splice(text, begin, end, payload):
+    b = text.index(begin) + len(begin)
+    e = text.index(end)
+    return text[:b] + "\n" + payload.strip() + "\n" + text[e:]
+
+
+exp = splice(exp, "<!-- ROOFLINE:BEGIN -->", "<!-- ROOFLINE:END -->",
+             open("results/roofline_table.md").read())
+# hillclimb table sits before the notes: replace only up to the notes marker
+begin = "<!-- HILLCLIMB:BEGIN -->"
+b = exp.index(begin) + len(begin)
+notes_at = exp.index("**Iteration notes", b)
+exp = exp[:b] + "\n" + open("results/hillclimb_table.md").read().strip() \
+    + "\n\n" + exp[notes_at:]
+open("EXPERIMENTS.md", "w").write(exp)
+print("EXPERIMENTS.md refreshed")

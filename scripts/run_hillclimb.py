@@ -1,0 +1,75 @@
+"""§Perf hillclimb driver: re-runs the three chosen (arch × shape) cells
+with one optimization lever flipped per variant, each in a fresh process
+(the dry-run entrypoint must own jax initialization).
+
+    python scripts/run_hillclimb.py            # all planned variants
+    python scripts/run_hillclimb.py --only deepseek
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+# (tag, arch, shape, env)   — one lever per step, cumulative per cell
+PLAN = [
+    # A. deepseek train_4k: worst memory term, most-MoE-representative
+    ("A1_moe_group16", "deepseek_v2_236b", "train_4k",
+     {"REPRO_MOE_GROUP": "16"}),
+    ("A2_plus_cap125", "deepseek_v2_236b", "train_4k",
+     {"REPRO_MOE_GROUP": "16", "REPRO_CAPACITY": "1.25"}),
+    ("A3_plus_onehot", "deepseek_v2_236b", "train_4k",
+     {"REPRO_MOE_GROUP": "16", "REPRO_CAPACITY": "1.25",
+      "REPRO_LOSS_MODE": "onehot"}),
+    # B. qwen train_4k: worst roofline fraction (tiny model, huge vocab) —
+    # collective-dominated by FSDP gathers + vocab-gather in the loss
+    ("B1_onehot_loss", "qwen1_5_0_5b", "train_4k",
+     {"REPRO_LOSS_MODE": "onehot"}),
+    ("B2_plus_nofsdp", "qwen1_5_0_5b", "train_4k",
+     {"REPRO_LOSS_MODE": "onehot", "REPRO_NO_FSDP": "1"}),
+    ("B3_plus_bf16params", "qwen1_5_0_5b", "train_4k",
+     {"REPRO_LOSS_MODE": "onehot", "REPRO_NO_FSDP": "1",
+      "REPRO_PARAM_DTYPE": "bfloat16"}),
+    # C. phi3 train_4k: largest collective seconds of the dense cells
+    ("C1_bf16_params", "phi3_medium_14b", "train_4k",
+     {"REPRO_PARAM_DTYPE": "bfloat16"}),
+    ("C2_plus_onehot", "phi3_medium_14b", "train_4k",
+     {"REPRO_PARAM_DTYPE": "bfloat16", "REPRO_LOSS_MODE": "onehot"}),
+    # D. head resharding: the B/C refutations traced the dominant all-reduce
+    # to the f32 logits psum over `data` (the head's contraction dim is
+    # FSDP-sharded) — reshard the weight, not the activations.
+    ("D1_head_reshard_qwen", "qwen1_5_0_5b", "train_4k",
+     {"REPRO_HEAD_RESHARD": "1"}),
+    ("D2_head_reshard_phi3", "phi3_medium_14b", "train_4k",
+     {"REPRO_HEAD_RESHARD": "1"}),
+    ("D3_head_reshard_deepseek", "deepseek_v2_236b", "train_4k",
+     {"REPRO_HEAD_RESHARD": "1", "REPRO_MOE_GROUP": "16"}),
+    # D4: phi3's 674 GB/dev collectives are f32 activation all-gathers from
+    # GSPMD resharding churn between blocks — pin the residual sharding.
+    ("D4_block_constraint_phi3", "phi3_medium_14b", "train_4k",
+     {"REPRO_HEAD_RESHARD": "1", "REPRO_BLOCK_CONSTRAINT": "1"}),
+    ("D5_block_constraint_qwen", "qwen1_5_0_5b", "train_4k",
+     {"REPRO_HEAD_RESHARD": "1", "REPRO_BLOCK_CONSTRAINT": "1"}),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    os.makedirs("results/hillclimb", exist_ok=True)
+    for tag, arch, shape, env in PLAN:
+        if args.only and args.only not in tag and args.only not in arch:
+            continue
+        outdir = f"results/hillclimb/{tag}"
+        if os.path.exists(f"{outdir}/{arch}__{shape}__pod.json"):
+            print(f"cached {tag}")
+            continue
+        print(f"=== {tag} ({arch} {shape}) env={env} ===", flush=True)
+        e = dict(os.environ, PYTHONPATH="src", **env)
+        subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", arch, "--shape", shape, "--out", outdir],
+                       env=e, check=False)
+
+
+if __name__ == "__main__":
+    main()

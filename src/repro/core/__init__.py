@@ -1,0 +1,13 @@
+"""The paper's primary contribution: an SC-style staged query compiler.
+
+  expr.py / ir.py     — expression + plan IR
+  passes/             — the optimization-pass library (paper §3)
+  compile.py          — whole-query staging to one specialized XLA program
+  volcano.py          — interpreted baseline engine (no compilation)
+"""
+from repro.core.compile import CompiledQuery
+from repro.core.passes.pipeline import LADDER, Settings, optimize, preset
+from repro.core.volcano import VolcanoEngine
+
+__all__ = ["CompiledQuery", "VolcanoEngine", "Settings", "optimize",
+           "preset", "LADDER"]

@@ -1,0 +1,103 @@
+"""Backend shim: the staging walker runs twice — once eagerly on numpy
+(8-row samples, to collect the input set and exercise static decisions) and
+once under jax tracing (the real staged program).  This shim abstracts the
+handful of ops whose spelling differs."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class NumpyBackend:
+    name = "numpy"
+    xp = np
+
+    @staticmethod
+    def take(arr, idx):
+        n = arr.shape[0]
+        if n == 0:  # collection walk over an empty sample slice
+            return np.zeros((len(idx),) + arr.shape[1:], dtype=arr.dtype)
+        return arr[np.clip(idx, 0, n - 1)]
+
+    @staticmethod
+    def segment_sum(data, ids, n):
+        out = np.zeros((n,) + data.shape[1:], dtype=data.dtype)
+        np.add.at(out, np.clip(ids, 0, n - 1), data)
+        return out
+
+    @staticmethod
+    def segment_max(data, ids, n, fill):
+        out = np.full((n,) + data.shape[1:], fill, dtype=data.dtype)
+        np.maximum.at(out, np.clip(ids, 0, n - 1), data)
+        return out
+
+    @staticmethod
+    def segment_min(data, ids, n, fill):
+        out = np.full((n,) + data.shape[1:], fill, dtype=data.dtype)
+        np.minimum.at(out, np.clip(ids, 0, n - 1), data)
+        return out
+
+    @staticmethod
+    def lexsort(keys):
+        return np.lexsort(tuple(keys))
+
+    @staticmethod
+    def barrier(x):
+        return x
+
+    @staticmethod
+    def searchsorted(a, v):
+        return np.searchsorted(a, v)
+
+
+class JaxBackend:
+    name = "jax"
+
+    def __init__(self):
+        import jax
+        import jax.numpy as jnp
+
+        self.xp = jnp
+        self._jax = jax
+
+    def take(self, arr, idx):
+        # jnp gather clamps out-of-bounds indices by default
+        return arr[idx]
+
+    def segment_sum(self, data, ids, n):
+        import jax
+
+        return jax.ops.segment_sum(data, ids, num_segments=n)
+
+    def segment_max(self, data, ids, n, fill):
+        import jax
+        import jax.numpy as jnp
+
+        out = jax.ops.segment_max(data, ids, num_segments=n)
+        # segment_max fills empty segments with -inf/min; normalize to fill
+        neutral = jnp.asarray(fill, dtype=data.dtype)
+        lo = -jnp.inf if data.dtype.kind == "f" else jnp.iinfo(data.dtype).min
+        return jnp.where(out == lo, neutral, out)
+
+    def segment_min(self, data, ids, n, fill):
+        import jax
+        import jax.numpy as jnp
+
+        out = jax.ops.segment_min(data, ids, num_segments=n)
+        neutral = jnp.asarray(fill, dtype=data.dtype)
+        hi = jnp.inf if data.dtype.kind == "f" else jnp.iinfo(data.dtype).max
+        return jnp.where(out == hi, neutral, out)
+
+    def lexsort(self, keys):
+        import jax.numpy as jnp
+
+        return jnp.lexsort(tuple(keys))
+
+    def barrier(self, x):
+        import jax
+
+        return jax.lax.optimization_barrier(x)
+
+    def searchsorted(self, a, v):
+        import jax.numpy as jnp
+
+        return jnp.searchsorted(a, v)

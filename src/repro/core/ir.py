@@ -1,0 +1,155 @@
+"""Query plan IR (logical nodes progressively annotated into physical form).
+
+Progressive lowering (paper §2.3): the plan starts purely logical
+(strategy fields at their 'generic' defaults) and each SC-style pass
+annotates/rewrites it — Join.strategy 'generic'→'pk_gather', Agg.strategy
+'generic'→'dense'/'scalar', Scan.date_slice set, string predicates rewritten
+to code predicates, Scan.columns pruned.  `compile.py` then stages the
+lowered plan into a single JAX function; `volcano.py` interprets the
+*unlowered* plan operator-at-a-time.
+
+Join orientation convention: `build` is the parent/PK side (the side a
+hash table would be built on), `stream` is the probe side.  All TPC-H
+equi-joins orient naturally with the FK holder streaming.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.expr import Expr
+
+
+@dataclasses.dataclass
+class DateSlice:
+    """Static row-range over a date-clustered permutation (§3.2.3)."""
+    col: str
+    lo: Optional[int]  # inclusive day, None = open
+    hi: Optional[int]  # exclusive day, None = open
+
+
+@dataclasses.dataclass
+class Scan:
+    table: str
+    # set by ColumnPruning: None = all columns
+    columns: Optional[list[str]] = None
+    # set by DateIndex: replaces the matching conjuncts of an enclosing Select
+    date_slice: Optional[DateSlice] = None
+
+
+@dataclasses.dataclass
+class Select:
+    child: "Plan"
+    pred: Expr
+
+
+@dataclasses.dataclass
+class Project:
+    child: "Plan"
+    outputs: dict[str, Expr]  # name -> expr; also acts as rename
+    keep_input: bool = True   # keep the child's columns alongside
+
+
+@dataclasses.dataclass
+class Join:
+    stream: "Plan"
+    build: "Plan"
+    stream_key: str
+    build_key: str
+    kind: str = "inner"          # inner | semi | anti | left
+    strategy: str = "generic"    # generic | pk_gather | exists_flag | bucket_gather
+    build_table: Optional[str] = None  # parent table when pk_gather
+    domain: Optional[int] = None       # key domain when exists_flag
+    # composite-key equi joins (paper §3.2.1 composite PKs, e.g. partsupp):
+    # second key pair; bucket_gather probes the load-time 2-D partitioned
+    # array on the first key and discriminates on the second within buckets.
+    stream_key2: Optional[str] = None
+    build_key2: Optional[str] = None
+    bucket_width: Optional[int] = None
+
+
+@dataclasses.dataclass
+class AggSpec:
+    name: str
+    fn: str          # sum | count | avg | min | max
+    expr: Optional[Expr] = None  # None for count(*)
+
+
+@dataclasses.dataclass
+class Agg:
+    child: "Plan"
+    group_by: list[str]
+    aggs: list[AggSpec]
+    # columns functionally dependent on the group key (e.g. Q3's o_orderdate
+    # given group key l_orderkey) — carried via a 'max' aggregate.
+    carry: list[str] = dataclasses.field(default_factory=list)
+    strategy: str = "generic"    # generic | dense | scalar  (HashMapLowering)
+    # for dense: mixed-radix index expr metadata filled by the pass
+    domains: Optional[list[int]] = None
+    # statistics hints for derived group keys (paper §3.5.2: key domains
+    # inferred from load-time statistics), e.g. Q13's per-customer count.
+    domain_hints: dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Sort:
+    child: "Plan"
+    keys: list[tuple[str, bool]]  # (col, ascending)
+
+
+@dataclasses.dataclass
+class Limit:
+    child: "Plan"
+    n: int
+
+
+Plan = Scan | Select | Project | Join | Agg | Sort | Limit
+
+
+def children(p: Plan) -> list[Plan]:
+    if isinstance(p, Scan):
+        return []
+    if isinstance(p, Join):
+        return [p.stream, p.build]
+    return [p.child]
+
+
+def replace_children(p: Plan, new: list[Plan]) -> None:
+    if isinstance(p, Scan):
+        return
+    if isinstance(p, Join):
+        p.stream, p.build = new
+        return
+    p.child = new[0]
+
+
+def walk(p: Plan):
+    yield p
+    for c in children(p):
+        yield from walk(c)
+
+
+def plan_repr(p: Plan, indent: int = 0) -> str:
+    pad = "  " * indent
+    if isinstance(p, Scan):
+        extra = ""
+        if p.date_slice:
+            extra += f" date_slice[{p.date_slice.col}]"
+        if p.columns is not None:
+            extra += f" cols={len(p.columns)}"
+        return f"{pad}Scan({p.table}{extra})"
+    if isinstance(p, Select):
+        return f"{pad}Select\n{plan_repr(p.child, indent + 1)}"
+    if isinstance(p, Project):
+        return f"{pad}Project({list(p.outputs)})\n{plan_repr(p.child, indent + 1)}"
+    if isinstance(p, Join):
+        return (f"{pad}Join[{p.kind}/{p.strategy}]({p.stream_key}={p.build_key})\n"
+                f"{plan_repr(p.stream, indent + 1)}\n{plan_repr(p.build, indent + 1)}")
+    if isinstance(p, Agg):
+        return (f"{pad}Agg[{p.strategy}](by={p.group_by}, "
+                f"aggs={[a.name for a in p.aggs]})\n{plan_repr(p.child, indent + 1)}")
+    if isinstance(p, Sort):
+        return f"{pad}Sort({p.keys})\n{plan_repr(p.child, indent + 1)}"
+    if isinstance(p, Limit):
+        return f"{pad}Limit({p.n})\n{plan_repr(p.child, indent + 1)}"
+    raise TypeError(type(p))

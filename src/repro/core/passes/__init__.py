@@ -1,0 +1,3 @@
+from repro.core.passes.pipeline import LADDER, Settings, build_pipeline, optimize, preset
+
+__all__ = ["Settings", "build_pipeline", "optimize", "preset", "LADDER"]

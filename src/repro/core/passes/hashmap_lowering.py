@@ -1,0 +1,53 @@
+"""Hash-map lowering (paper §3.2.2).
+
+Generic hash aggregation is specialized using schema + statistics knowledge
+collected at load time:
+
+  * no group key                     -> 'scalar' (the paper's "single,
+    statically-known key" case, e.g. Q6's global aggregate): accumulators
+    become scalar registers;
+  * all group-key domains statically known and small -> 'dense': the hash
+    map becomes a pre-allocated native array indexed by a mixed-radix
+    composite of the key codes (the paper's "convert the hash map to a
+    native array", with the pre-allocation sized by worst-case analysis and
+    the initialization hoisted off the critical path — in XLA the
+    accumulator is a statically-shaped zero buffer);
+  * otherwise                        -> 'generic' sort-based grouping.
+
+Domains come from: CAT dictionary sizes, dense PK/FK ranges, integer stats,
+or explicit statistics hints (`Agg.domain_hints`, §3.5.2).
+"""
+from __future__ import annotations
+
+from repro.core import ir
+from repro.core.passes.provenance import col_domain, col_kind
+from repro.relational.loader import Database
+from repro.relational.schema import ColKind
+
+
+class HashMapLowering:
+    name = "HashMapLowering"
+
+    def run(self, plan: ir.Plan, db: Database, settings) -> ir.Plan:
+        for node in ir.walk(plan):
+            if not isinstance(node, ir.Agg) or node.strategy != "generic":
+                continue
+            if not node.group_by:
+                node.strategy = "scalar"
+                continue
+            # Without string dictionaries a CAT key has no integer code
+            # domain — the dictionary IS the domain knowledge (§3.4/§3.2.2).
+            if not settings.string_dict and any(
+                    col_kind(node.child, g, db) == ColKind.CAT
+                    for g in node.group_by):
+                continue
+            domains = [col_domain(node.child, g, db, node.domain_hints)
+                       for g in node.group_by]
+            if all(d is not None for d in domains):
+                total = 1
+                for d in domains:
+                    total *= d
+                if total <= settings.dense_agg_cap:
+                    node.strategy = "dense"
+                    node.domains = [int(d) for d in domains]
+        return plan

@@ -1,0 +1,122 @@
+"""The SC-analogue transformation pipeline (paper §2.2, Fig 5b).
+
+Each optimization is a `Pass`: a black-box plan→plan transformer with no
+dependence on other passes or on the engine base code.  `build_pipeline`
+assembles the explicit, settings-driven pipeline exactly as Fig 5b does —
+passes can be turned on/off independently and reordered, and constant
+folding / simplification runs after each domain-specific pass (the paper's
+``ParamPromDCEAndPartiallyEvaluate`` interleaving).
+
+Engine-configuration ladder (paper Table III) is expressed as `Settings`
+presets at the bottom of this file.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+from repro.core import ir
+
+
+@dataclasses.dataclass
+class Settings:
+    # --- execution style -----------------------------------------------------
+    # 'volcano'  : interpreted operator-at-a-time numpy engine (DBX analogue)
+    # 'compiled' : whole-query staged JAX program (LegoBase analogue)
+    engine: str = "compiled"
+    # operator fusion across the whole query; False inserts optimization
+    # barriers between operators ≈ template-expansion compilers that codegen
+    # operators independently (HyPer-style scope limit, paper §1/Fig 2).
+    fusion: bool = True
+    # --- domain-specific optimizations (paper §3) ----------------------------
+    partitioning: bool = True       # §3.2.1 PK/FK partitioned joins
+    dense_agg: bool = True          # §3.2.2 hash-map lowering to arrays
+    date_index: bool = True         # §3.2.3 date indices
+    string_dict: bool = True        # §3.4 string dictionaries
+    column_pruning: bool = True     # §3.6.1 unused-attribute removal
+    cse: bool = True                # §3.6 CSE / partial evaluation
+    hoist: bool = True              # §3.5 domain-specific code motion
+    layout: str = "column"          # §3.3: 'column' (SoA) or 'row' (AoS)
+    # --- beyond-paper ---------------------------------------------------------
+    use_pallas: bool = False        # fuse hot paths into Pallas TPU kernels
+    topk_limit: bool = True         # ORDER BY+LIMIT k -> top-k selection
+    dense_agg_cap: int = 1 << 22    # max dense key domain (worst-case alloc)
+
+
+class Pass(Protocol):
+    name: str
+
+    def run(self, plan: ir.Plan, db, settings: Settings) -> ir.Plan: ...
+
+
+def build_pipeline(settings: Settings) -> list[Pass]:
+    from repro.core.passes.column_pruning import ColumnPruning
+    from repro.core.passes.cse_dce import FoldAndSimplify
+    from repro.core.passes.date_index import DateIndex
+    from repro.core.passes.fusion import SelectFusion
+    from repro.core.passes.hashmap_lowering import HashMapLowering
+    from repro.core.passes.partitioning import Partitioning
+    from repro.core.passes.string_dict import StringDictionary
+
+    pipeline: list[Pass] = []
+    pipeline.append(SelectFusion())           # always: canonicalizes Select chains
+    if settings.cse:
+        pipeline.append(FoldAndSimplify())
+    if settings.date_index:
+        pipeline.append(DateIndex())
+    if settings.dense_agg:
+        pipeline.append(HashMapLowering())
+    if settings.partitioning:
+        pipeline.append(Partitioning())
+    if settings.string_dict:
+        pipeline.append(StringDictionary())
+    if settings.cse:
+        pipeline.append(FoldAndSimplify())
+    if settings.column_pruning:
+        pipeline.append(ColumnPruning())      # last: prune post-rewrite
+    return pipeline
+
+
+def optimize(plan: ir.Plan, db, settings: Settings) -> ir.Plan:
+    for p in build_pipeline(settings):
+        plan = p.run(plan, db, settings)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Engine ladder presets (paper Table III)
+# ---------------------------------------------------------------------------
+
+def preset(name: str) -> Settings:
+    if name == "dbx":            # commercial in-memory DBMS, no compilation
+        return Settings(engine="volcano", fusion=False, partitioning=False,
+                        dense_agg=False, date_index=False, string_dict=False,
+                        column_pruning=False, cse=False, hoist=False)
+    if name == "naive":          # LegoBase(Naive): inlining/push only
+        return Settings(engine="compiled", fusion=True, partitioning=False,
+                        dense_agg=False, date_index=False, string_dict=False,
+                        column_pruning=False, cse=False, hoist=False,
+                        topk_limit=False)
+    if name == "template":       # HyPer-style: per-operator codegen scope
+        return Settings(engine="compiled", fusion=False, partitioning=True,
+                        dense_agg=False, date_index=False, string_dict=False,
+                        column_pruning=False, cse=False, hoist=False,
+                        topk_limit=False)
+    if name == "tpch":           # LegoBase(TPC-H/C): + partitioning
+        return Settings(engine="compiled", fusion=True, partitioning=True,
+                        dense_agg=False, date_index=False, string_dict=False,
+                        column_pruning=False, cse=False, hoist=False,
+                        topk_limit=False)
+    if name == "strdict":        # LegoBase(StrDict/C)
+        return Settings(engine="compiled", fusion=True, partitioning=True,
+                        dense_agg=False, date_index=False, string_dict=True,
+                        column_pruning=False, cse=False, hoist=False,
+                        topk_limit=False)
+    if name == "opt":            # LegoBase(Opt/C): everything
+        return Settings()
+    if name == "opt-pallas":     # beyond paper: + Pallas fused kernels
+        return Settings(use_pallas=True)
+    raise KeyError(name)
+
+
+LADDER = ["dbx", "naive", "tpch", "strdict", "opt"]

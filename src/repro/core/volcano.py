@@ -1,0 +1,256 @@
+"""Interpreted, operator-at-a-time baseline engine (the "DBX" rung).
+
+Executes the *logical* plan directly on numpy: every operator fully
+materializes its (compacted) output before the next one runs, strings are
+raw fixed-width char matrices compared strcmp-style, joins build generic
+associative structures, aggregations group generically — no compilation, no
+specialization, no query-specific knowledge.  Deliberately the world the
+paper's Figure 1 puts at the productive-but-slow corner.
+
+It is also the correctness oracle for the staged engine (independent code
+path, compaction instead of masking).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ir
+from repro.core.expr import EvalEnv, eval_expr
+from repro.relational.loader import Database
+from repro.relational.schema import ColKind
+
+_BIG = np.float32(3.0e38)
+
+
+def _decode_chars(mat: np.ndarray) -> np.ndarray:
+    if mat.size == 0:
+        return np.zeros((mat.shape[0],), dtype="U1")
+    w = mat.shape[1]
+    b = np.ascontiguousarray(mat).view(f"S{w}")[:, 0]
+    return np.char.decode(np.char.rstrip(b, b"\x00"), "ascii").astype(str)
+
+
+class _Env(EvalEnv):
+    """Columns are numpy arrays; strings resolved through char matrices."""
+
+    def __init__(self, cols: dict[str, np.ndarray],
+                 chars: dict[str, np.ndarray]):
+        super().__init__(np, cse=False)   # the baseline does not CSE
+        self.cols = cols
+        self.chars = chars
+
+    def get_num(self, name):
+        return self.cols[name]
+
+    def get_chars(self, name):
+        return self.chars[name]
+
+    def get_word_chars(self, name):
+        return self.chars[name]
+
+    def get_codes(self, name):  # pragma: no cover - volcano never lowers
+        raise RuntimeError("volcano engine has no dictionary codes")
+
+    get_words = get_codes
+
+
+class Relation:
+    """Materialized intermediate: numeric columns + char matrices."""
+
+    def __init__(self, cols: dict[str, np.ndarray],
+                 chars: dict[str, np.ndarray]):
+        self.cols = cols
+        self.chars = chars
+
+    @property
+    def nrows(self) -> int:
+        src = self.cols or self.chars
+        return len(next(iter(src.values())))
+
+    def take(self, idx) -> "Relation":
+        return Relation({k: v[idx] for k, v in self.cols.items()},
+                        {k: v[idx] for k, v in self.chars.items()})
+
+    def env(self) -> _Env:
+        return _Env(self.cols, self.chars)
+
+    def key_for_sort(self, name: str, asc: bool) -> np.ndarray:
+        if name in self.cols:
+            v = self.cols[name]
+            return v if asc else -v
+        s = _decode_chars(self.chars[name])
+        if not asc:
+            raise NotImplementedError("descending string sort")
+        return s
+
+
+class VolcanoEngine:
+    def __init__(self, db: Database):
+        self.db = db
+
+    def execute(self, plan: ir.Plan) -> dict[str, np.ndarray]:
+        rel = self._exec(plan)
+        out = dict(rel.cols)
+        for name, mat in rel.chars.items():
+            out[name] = _decode_chars(mat)
+        return out
+
+    # ------------------------------------------------------------------
+    def _exec(self, p: ir.Plan) -> Relation:
+        if isinstance(p, ir.Scan):
+            t = self.db.table(p.table)
+            cols, chars = {}, {}
+            names = p.columns if p.columns is not None else t.schema.column_names
+            for c in names:
+                kind = t.schema.col(c).kind
+                if kind in (ColKind.INT, ColKind.FLOAT, ColKind.DATE):
+                    cols[c] = t.data[c]
+                else:
+                    chars[c] = t.char_matrix(c)
+            return Relation(cols, chars)
+
+        if isinstance(p, ir.Select):
+            rel = self._exec(p.child)
+            m = eval_expr(p.pred, rel.env())
+            return rel.take(np.flatnonzero(m))
+
+        if isinstance(p, ir.Project):
+            rel = self._exec(p.child)
+            cols = dict(rel.cols) if p.keep_input else {}
+            chars = dict(rel.chars) if p.keep_input else {}
+            env = rel.env()
+            for name, e in p.outputs.items():
+                from repro.core.expr import Col
+                if isinstance(e, Col) and e.name in rel.chars:
+                    chars[name] = rel.chars[e.name]
+                else:
+                    cols[name] = np.asarray(eval_expr(e, env))
+            return Relation(cols, chars)
+
+        if isinstance(p, ir.Join):
+            stream = self._exec(p.stream)
+            build = self._exec(p.build)
+            skey = stream.cols[p.stream_key]
+            bkey = build.cols[p.build_key]
+            if p.stream_key2 is not None:   # composite key: pack into int64
+                mul = np.int64(max(int(build.cols[p.build_key2].max(initial=0)),
+                                   int(stream.cols[p.stream_key2].max(initial=0))
+                                   ) + 1)
+                skey = skey.astype(np.int64) * mul \
+                    + stream.cols[p.stream_key2].astype(np.int64)
+                bkey = bkey.astype(np.int64) * mul \
+                    + build.cols[p.build_key2].astype(np.int64)
+            if p.kind in ("semi", "anti"):
+                hit = np.isin(skey, bkey)
+                if p.kind == "anti":
+                    hit = ~hit
+                return stream.take(np.flatnonzero(hit))
+            order = np.argsort(bkey, kind="stable")
+            sk = bkey[order]
+            pos = np.searchsorted(sk, skey)
+            pos = np.clip(pos, 0, max(len(sk) - 1, 0))
+            hit = (sk[pos] == skey) if len(sk) else np.zeros(len(skey), bool)
+            if p.kind == "left":
+                out = stream.take(np.arange(stream.nrows))
+                bidx = order[pos] if len(sk) else np.zeros(len(skey), int)
+                for name, v in build.cols.items():
+                    if name not in out.cols:
+                        out.cols[name] = np.where(hit, v[bidx], 0)
+                return out
+            sel = np.flatnonzero(hit)
+            bidx = order[pos[sel]]
+            out = stream.take(sel)
+            for name, v in build.cols.items():
+                if name not in out.cols:
+                    out.cols[name] = v[bidx]
+            for name, v in build.chars.items():
+                if name not in out.chars:
+                    out.chars[name] = v[bidx]
+            return out
+
+        if isinstance(p, ir.Agg):
+            rel = self._exec(p.child)
+            env = rel.env()
+            n = rel.nrows
+            if not p.group_by:
+                cols = {}
+                for spec in p.aggs:
+                    v = (np.asarray(eval_expr(spec.expr, env))
+                         if spec.expr is not None else None)
+                    cols[spec.name] = np.array([_scalar_agg(spec.fn, v, n)],
+                                               dtype=np.float32
+                                               if spec.fn != "count"
+                                               else np.int32)
+                return Relation(cols, {})
+            # generic grouping via lexsort over the (decoded) key columns
+            keyarrs = []
+            for g in p.group_by:
+                if g in rel.cols:
+                    keyarrs.append(rel.cols[g])
+                else:
+                    keyarrs.append(_decode_chars(rel.chars[g]))
+            order = np.lexsort(tuple(reversed(keyarrs)))
+            skeys = [k[order] for k in keyarrs]
+            if n == 0:
+                newg = np.zeros(0, dtype=bool)
+            else:
+                newg = np.ones(n, dtype=bool)
+                acc = np.zeros(n - 1, dtype=bool)
+                for k in skeys:
+                    acc |= k[1:] != k[:-1]
+                newg[1:] = acc
+            starts = np.flatnonzero(newg)
+            gid = np.cumsum(newg) - 1
+            ngroups = len(starts)
+            out_cols, out_chars = {}, {}
+            for g in p.group_by + list(p.carry):
+                if g in rel.cols:
+                    out_cols[g] = rel.cols[g][order][starts]
+                else:
+                    out_chars[g] = rel.chars[g][order][starts]
+            for spec in p.aggs:
+                if spec.expr is not None:
+                    v = np.asarray(eval_expr(spec.expr, env))[order]
+                if spec.fn == "count":
+                    out_cols[spec.name] = np.bincount(
+                        gid, minlength=ngroups).astype(np.int32)
+                elif spec.fn == "sum":
+                    out_cols[spec.name] = np.add.reduceat(v, starts).astype(
+                        v.dtype) if n else np.zeros(0, np.float32)
+                elif spec.fn == "avg":
+                    s = np.add.reduceat(v, starts)
+                    c = np.bincount(gid, minlength=ngroups)
+                    out_cols[spec.name] = (s / np.maximum(c, 1)).astype(np.float32)
+                elif spec.fn == "min":
+                    out_cols[spec.name] = np.minimum.reduceat(v, starts)
+                elif spec.fn == "max":
+                    out_cols[spec.name] = np.maximum.reduceat(v, starts)
+            return Relation(out_cols, out_chars)
+
+        if isinstance(p, ir.Sort):
+            rel = self._exec(p.child)
+            keys = [rel.key_for_sort(name, asc) for name, asc in p.keys]
+            order = np.lexsort(tuple(reversed(keys)))
+            return rel.take(order)
+
+        if isinstance(p, ir.Limit):
+            rel = self._exec(p.child)
+            return rel.take(np.arange(min(p.n, rel.nrows)))
+
+        raise TypeError(type(p))
+
+
+def _scalar_agg(fn: str, v, n: int):
+    if fn == "count":
+        return n
+    if n == 0:
+        return 0.0
+    if fn == "sum":
+        return v.sum()
+    if fn == "avg":
+        return v.mean()
+    if fn == "min":
+        return v.min()
+    if fn == "max":
+        return v.max()
+    raise ValueError(fn)

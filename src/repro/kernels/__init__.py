@@ -1,0 +1,4 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import filter_agg, gather_join, masked_topk
+
+__all__ = ["ops", "ref", "filter_agg", "gather_join", "masked_topk"]

@@ -1,0 +1,83 @@
+"""Fused filter + grouped-aggregation Pallas TPU kernel.
+
+The TPU-native form of the paper's specialized query loop (Fig 4b / Q1/Q6
+after all optimizations): one pass over the fact table computing the
+selection mask and all aggregates with **no intermediate materialization**.
+
+Hardware adaptation: the generated-C version accumulates into a hash map
+with branch-predicted `if`s; on TPU we tile rows HBM→VMEM and accumulate
+every aggregate for every group with a *one-hot × values matmul on the
+MXU*:
+
+    partial[G, A] += onehot(group_idx)[T, G]^T  @  (mask * values)[T, A]
+
+The (G, A) accumulator lives in VMEM across all grid steps (the TPU grid is
+sequential, so `out_ref` accumulation is safe), i.e. the paper's
+"pre-allocated, initialization-hoisted aggregation array" (§3.2.2/§3.5.2)
+becomes a VMEM-resident scratch that never touches HBM until the end.
+
+Scalar aggregation (Q6) is the G=1 special case.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(mask_ref, gidx_ref, vals_ref, out_ref, *, n_groups: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    m = mask_ref[...]                     # (T, 1) bool
+    g = gidx_ref[...]                     # (T, 1) int32
+    v = vals_ref[...]                     # (T, A) float32
+    tile = v.shape[0]
+    groups = jax.lax.broadcasted_iota(jnp.int32, (tile, n_groups), 1)
+    onehot = ((g == groups) & m).astype(jnp.float32)        # (T, G)
+    # MXU contraction: (G, T) @ (T, A) -> (G, A)
+    out_ref[...] += jnp.dot(onehot.T, v * m.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "tile", "interpret"))
+def filter_agg(mask: jax.Array, gidx: jax.Array, vals: jax.Array,
+               n_groups: int, *, tile: int = 2048,
+               interpret: bool = True) -> jax.Array:
+    """sum of `vals[i, a]` into group `gidx[i]` where `mask[i]`.
+
+    mask: (n,) bool; gidx: (n,) int32; vals: (n, A) float32.
+    Returns (n_groups, A) float32.
+    """
+    n, a = vals.shape
+    # --- padding to hardware-friendly tiles -------------------------------
+    n_pad = (-n) % tile
+    a_pad = (-a) % 128 if not interpret else 0
+    g_eff = n_groups if interpret else max(8, n_groups)
+    if n_pad:
+        mask = jnp.pad(mask, (0, n_pad))          # padded rows masked out
+        gidx = jnp.pad(gidx, (0, n_pad))
+        vals = jnp.pad(vals, ((0, n_pad), (0, 0)))
+    if a_pad:
+        vals = jnp.pad(vals, ((0, 0), (0, a_pad)))
+    n_t, a_t = vals.shape
+    grid = (n_t // tile,)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_groups=g_eff),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, a_t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((g_eff, a_t), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g_eff, a_t), jnp.float32),
+        interpret=interpret,
+    )(mask[:, None], gidx[:, None], vals)
+    return out[:n_groups, :a]

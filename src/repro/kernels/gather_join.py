@@ -1,0 +1,60 @@
+"""Partitioned PK/FK join probe as a Pallas TPU kernel (dimension tables).
+
+The paper's §3.2.1 partitioned join — `MR[s->id]` direct array access — is a
+gather.  For *dimension-table* builds that fit VMEM (region/nation/part-
+class tables; K ≤ a few thousand), the TPU-native probe keeps the whole
+parent table VMEM-resident across all grid steps and performs the gather as
+a one-hot × table matmul on the MXU:
+
+    out[T, C] = onehot(fk)[T, K] @ table[K, C]
+
+This is deliberately *not* a scalar hash probe: the MXU contraction is the
+idiomatic TPU spelling of K-way selection, and it fuses with downstream
+arithmetic in the same VMEM tile.  Large parents use XLA's native gather
+outside the kernel (`compile.py` pk_gather path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(fk_ref, table_ref, out_ref):
+    fk = fk_ref[...]                      # (T, 1) int32
+    tbl = table_ref[...]                  # (K, C) float32 — VMEM resident
+    k = tbl.shape[0]
+    tile = fk.shape[0]
+    keys = jax.lax.broadcasted_iota(jnp.int32, (tile, k), 1)
+    onehot = (fk == keys).astype(jnp.float32)         # (T, K)
+    out_ref[...] = jnp.dot(onehot, tbl, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def gather_join(fk: jax.Array, table: jax.Array, *, tile: int = 1024,
+                interpret: bool = True) -> jax.Array:
+    """out[i, :] = table[fk[i], :] (out-of-range fk rows return zeros).
+
+    fk: (n,) int32; table: (K, C) float32.  Returns (n, C) float32.
+    """
+    n = fk.shape[0]
+    k, c = table.shape
+    n_pad = (-n) % tile
+    if n_pad:
+        fk = jnp.pad(fk, (0, n_pad), constant_values=-1)
+    n_t = fk.shape[0]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_t // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((k, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_t, c), jnp.float32),
+        interpret=interpret,
+    )(fk[:, None], table)
+    return out[:n]

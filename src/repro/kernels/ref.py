@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def filter_agg_ref(mask, gidx, vals, n_groups):
+    data = jnp.where(mask[:, None], vals, 0.0)
+    return jax.ops.segment_sum(data, gidx, num_segments=n_groups)
+
+
+def gather_join_ref(fk, table):
+    k = table.shape[0]
+    ok = (fk >= 0) & (fk < k)
+    out = table[jnp.clip(fk, 0, k - 1)]
+    return jnp.where(ok[:, None], out, 0.0)
+
+
+def masked_topk_ref(vals, mask, k):
+    neg = jnp.float32(-3.0e38)
+    v = jnp.where(mask, vals, neg)
+    if k > v.shape[0]:
+        v = jnp.pad(v, (0, k - v.shape[0]), constant_values=neg)
+    topv, topi = jax.lax.top_k(v, k)
+    topi = jnp.where(topv <= neg, -1, topi)
+    return topv, topi

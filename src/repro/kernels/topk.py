@@ -1,0 +1,75 @@
+"""Masked top-k Pallas TPU kernel (ORDER BY <metric> DESC LIMIT k).
+
+TPU adaptation of the paper's sort operator for limit queries (Q3/Q10/Q18):
+a global sort is wasteful when only k rows survive.  Each grid step reduces
+a VMEM tile to its local top-k by iterative max-extraction (k is small and
+static, so the loop unrolls into straight-line vector code — the staged
+specialization the paper applies to, e.g., statically-sized aggregate
+arrays).  The (num_tiles, k) partials are then reduced by `jax.lax.top_k`
+host-side of the kernel, which is O(num_tiles·k) — negligible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = np.float32(-3.0e38)  # python-level constant: not a captured tracer
+
+
+def _kernel(vals_ref, mask_ref, outv_ref, outi_ref, *, k: int, tile: int):
+    step = pl.program_id(0)
+    v = jnp.where(mask_ref[...], vals_ref[...], _NEG)[:, 0]   # (T,)
+    base = step * tile
+    idx = jax.lax.broadcasted_iota(jnp.int32, (tile,), 0) + base
+    for j in range(k):                    # unrolled: k is static
+        m = jnp.max(v)
+        am = jnp.argmax(v)
+        outv_ref[0, j] = m
+        outi_ref[0, j] = (idx[am]).astype(jnp.int32)
+        v = jnp.where(jax.lax.broadcasted_iota(jnp.int32, (tile,), 0) == am,
+                      _NEG, v)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+def masked_topk(vals: jax.Array, mask: jax.Array, k: int, *,
+                tile: int = 4096, interpret: bool = True
+                ) -> tuple[jax.Array, jax.Array]:
+    """Top-k values of `vals` where `mask`, with their row indices.
+
+    Returns (values (k,), indices (k,)); if fewer than k rows are valid the
+    tail carries -inf sentinels and index -1.
+    """
+    n = vals.shape[0]
+    n_pad = (-n) % tile
+    if n_pad:
+        vals = jnp.pad(vals, (0, n_pad))
+        mask = jnp.pad(mask, (0, n_pad))
+    n_t = vals.shape[0]
+    grid = (n_t // tile,)
+
+    pv, pi = pl.pallas_call(
+        functools.partial(_kernel, k=k, tile=tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0], k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vals[:, None], mask[:, None])
+
+    flatv, flati = pv.reshape(-1), pi.reshape(-1)
+    topv, pos = jax.lax.top_k(flatv, k)
+    topi = jnp.where(topv <= _NEG, -1, flati[pos])
+    return topv, topi

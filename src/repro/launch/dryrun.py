@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell against ShapeDtypeStruct stand-ins, print memory/cost analysis,
+and emit the roofline terms to JSON.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1_5_0_5b \
+      --shape train_4k [--multipod] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+The two os.environ lines above MUST stay the first statements in this file:
+jax locks the device count at first initialization.
+"""
+import argparse        # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SKIPS, get_config, shapes_for  # noqa: E402
+from repro.launch import roofline as R                           # noqa: E402
+from repro.launch.mesh import make_ctx, make_production_mesh    # noqa: E402
+from repro.launch import specs as SP                             # noqa: E402
+from repro.models.config import SHAPES                           # noqa: E402
+from repro.models.transformer import decode_step, prefill        # noqa: E402
+from repro.train.optimizer import AdamConfig                     # noqa: E402
+from repro.train.train_step import make_train_state, train_step  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P       # noqa: E402
+
+
+def _opt_struct(pstruct):
+    """ShapeDtypeStructs for the TrainState built from params structs."""
+    from repro.train.optimizer import AdamState
+    from repro.train.train_step import TrainState
+
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return TrainState(
+        params=pstruct,
+        opt=AdamState(m=jax.tree.map(f32, pstruct),
+                      v=jax.tree.map(f32, pstruct),
+                      step=jax.ShapeDtypeStruct((), jnp.int32)),
+        ef=None)
+
+
+def probe_config(cfg, reps: int, attn_impl: str = "naive"):
+    """Config with `reps` pattern-repeats (for cost extrapolation: XLA's
+    HloCostAnalysis counts while-loop bodies once, so scanned-layer costs
+    are measured at 1 and 2 reps and extrapolated linearly to the real
+    depth — dot-flop counting itself was calibrated exactly).
+
+    attn_impl='naive'     exact attention FLOPs (S×S visible)  -> compute &
+                          collective terms;
+    attn_impl='blockwise' flash semantics (no S² materialization) -> memory
+                          term, plus an analytic one-pass q/k/v/out byte
+                          correction (roofline.flash_bytes)."""
+    import dataclasses
+
+    plen = len(cfg.pattern)
+    enc = min(cfg.encoder_layers, reps) if cfg.encoder_layers else 0
+    return dataclasses.replace(cfg, n_layers=plen * reps, encoder_layers=enc,
+                               unroll=True, attn_impl=attn_impl)
+
+
+def _env_overrides(cfg):
+    """§Perf hillclimb levers applied via environment (each variant runs in
+    its own process; see scripts/run_hillclimb.py):
+      REPRO_PARAM_DTYPE  bfloat16 params (FSDP gathers halve)
+      REPRO_CAPACITY     MoE capacity factor
+      REPRO_QBLOCK unused here (attention block sizes are code-level)
+    """
+    import dataclasses
+
+    kw = {}
+    if os.environ.get("REPRO_PARAM_DTYPE"):
+        kw["param_dtype"] = os.environ["REPRO_PARAM_DTYPE"]
+    if os.environ.get("REPRO_CAPACITY"):
+        kw["capacity_factor"] = float(os.environ["REPRO_CAPACITY"])
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               cfg_override=None):
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    cfg = _env_overrides(cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh)
+    pstruct = SP.params_struct(cfg)
+    pshard = SP.param_shardings(pstruct, ctx)
+
+    if shape.kind == "train":
+        state = _opt_struct(pstruct)
+        state_shard = type(state)(
+            params=pshard,
+            opt=type(state.opt)(m=pshard, v=pshard,
+                                step=NamedSharding(mesh, P())),
+            ef=None)
+        batch = SP.batch_struct(cfg, shape, train=True)
+        bshard = SP.batch_shardings(batch, ctx)
+
+        def fn(st, b):
+            return train_step(st, b, cfg, ctx, AdamConfig())
+
+        jitted = jax.jit(fn, in_shardings=(state_shard, bshard),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state, batch)
+    elif shape.kind == "prefill":
+        batch = SP.batch_struct(cfg, shape, train=False)
+        bshard = SP.batch_shardings(batch, ctx)
+
+        def fn(p, b):
+            return prefill(p, b, cfg, ctx)
+
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(pstruct, batch)
+    else:  # decode
+        token, pos, cache = SP.decode_structs(cfg, shape)
+        cshard = SP.cache_shardings(cache, shape.global_batch, ctx)
+        tshard = NamedSharding(
+            mesh, P(ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0])
+            if shape.global_batch % ctx.dp_size == 0 else P())
+
+        def fn(p, t, c, ps):
+            return decode_step(p, t, c, ps, cfg, ctx)
+
+        jitted = jax.jit(fn,
+                         in_shardings=(pshard, tshard, cshard,
+                                       NamedSharding(mesh, P())),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(pstruct, token, cache, pos)
+    return cfg, shape, mesh, lowered
+
+
+def _measure(arch, shape_name, multi_pod, cfg_override=None):
+    t0 = time.perf_counter()
+    cfg, shape, mesh, lowered = lower_cell(arch, shape_name,
+                                           multi_pod=multi_pod,
+                                           cfg_override=cfg_override)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    ca = compiled.cost_analysis() or {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = R.collective_bytes(hlo)
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+        }
+    except Exception:
+        mem = {}
+    return {
+        "cfg": cfg, "shape": shape, "mesh": mesh,
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": coll, "coll_total": float(coll.get("total", 0.0)),
+        "mem": mem, "t_lower": t_lower, "t_compile": t_compile,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
+    cfg_full = get_config(arch)
+    plen = len(cfg_full.pattern)
+    reps = cfg_full.n_layers // plen
+
+    # full program: the compile proof + memory analysis
+    full = _measure(arch, shape_name, multi_pod)
+    cfg, shape, mesh = full["cfg"], full["shape"], full["mesh"]
+    chips = mesh.size
+    t_lower, t_compile = full["t_lower"], full["t_compile"]
+    mem, coll = full["mem"], full["coll"]
+
+    if reps > 2:
+        # shallow probes -> per-rep slope -> extrapolate to real depth
+        p1 = _measure(arch, shape_name, multi_pod,
+                      cfg_override=probe_config(cfg_full, 1))
+        p2 = _measure(arch, shape_name, multi_pod,
+                      cfg_override=probe_config(cfg_full, 2))
+        extrap = lambda f1, f2: f1 + (reps - 1) * (f2 - f1)
+        flops_dev = extrap(p1["flops"], p2["flops"])
+        bytes_naive = extrap(p1["bytes"], p2["bytes"])
+        coll_dev = extrap(p1["coll_total"], p2["coll_total"])
+        has_attn = any(k in ("attn", "mla") for k in cfg_full.pattern) \
+            or cfg_full.encoder_layers > 0
+        if has_attn and shape.kind != "decode":
+            b1 = _measure(arch, shape_name, multi_pod,
+                          cfg_override=probe_config(cfg_full, 1, "blockwise"))
+            b2 = _measure(arch, shape_name, multi_pod,
+                          cfg_override=probe_config(cfg_full, 2, "blockwise"))
+            bytes_dev = extrap(b1["bytes"], b2["bytes"]) \
+                + R.flash_bytes(cfg_full, shape, chips)
+        else:
+            bytes_dev = bytes_naive
+    else:
+        flops_dev, bytes_dev = full["flops"], full["bytes"]
+        bytes_naive = bytes_dev
+        coll_dev = full["coll_total"]
+    # inherently-sequential sLSTM recurrence: analytic correction
+    flops_dev += R.slstm_correction_flops(cfg_full, shape, chips)
+    terms = R.roofline_terms(flops_dev, bytes_dev, coll_dev, chips)
+    mf = R.model_flops(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+        "bytes_per_dev_naive_attn": bytes_naive,
+        "collective_bytes_per_dev": coll_dev,
+        "collectives": coll, "memory": mem,
+        "model_flops_total": mf,
+        "useful_flops_ratio": mf / max(flops_dev * chips, 1e-30),
+        "lower_s": t_lower, "compile_s": t_compile,
+        "params": R.param_count(cfg),
+        "params_active": R.param_count(cfg, active_only=True),
+        **terms,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in shapes_for(arch):
+                cells.append((arch, shape, False))
+                cells.append((arch, shape, True))
+    else:
+        assert args.arch and args.shape
+        if args.shape in SKIPS.get(args.arch, {}):
+            print(f"SKIP {args.arch} {args.shape}: "
+                  f"{SKIPS[args.arch][args.shape]}")
+            return
+        cells.append((args.arch, args.shape, args.multipod))
+
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"cached {tag}")
+            continue
+        print(f"=== {tag} ===", flush=True)
+        try:
+            res = run_cell(arch, shape, multi_pod=mp)
+            print(json.dumps({k: v for k, v in res.items()
+                              if k not in ("collectives", "memory")},
+                             indent=None, default=str), flush=True)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1, default=str)
+        except Exception:
+            traceback.print_exc()
+            with open(path + ".err", "w") as f:
+                f.write(traceback.format_exc())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+`make_production_mesh` is a function (never a module-level constant) so
+importing this module never touches jax device state.  Single pod =
+(data=16, model=16) over 256 chips; multi-pod adds a leading pod=2 axis
+(512 chips), with ('pod','data') jointly forming the batch/FSDP dimension.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import Ctx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — the dry-run entrypoint "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import")
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_ctx(mesh) -> Ctx:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return Ctx(mesh=mesh, dp_axes=dp, tp_axis="model")

@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+Nothing here allocates device memory: parameters come from
+`jax.eval_shape(init_params, ...)`, inputs are ShapeDtypeStructs, and the
+dry-run lowers/compiles against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.sharding import Ctx, batch_spec, cache_spec, param_specs
+from repro.models.transformer import cache_struct, init_params
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_struct(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)
+
+
+def param_shardings(struct, ctx: Ctx):
+    specs = param_specs(struct, ctx)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _extras_struct(cfg: ModelConfig, b: int, s: int) -> dict[str, Any]:
+    out = {}
+    if cfg.encoder_layers:
+        out["frames"] = sds((b, max(s // 4, 8), cfg.d_model), jnp.bfloat16)
+    if cfg.n_patches:
+        out["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model),
+                                  jnp.bfloat16)
+    return out
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, *, train: bool):
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": sds((b, s), jnp.int32)}
+    if train:
+        out["targets"] = sds((b, s), jnp.int32)
+    out.update(_extras_struct(cfg, b, s))
+    return out
+
+
+def batch_shardings(batch, ctx: Ctx):
+    def leaf(x):
+        spec = [None] * len(x.shape)
+        spec[0] = batch_spec(ctx)
+        return NamedSharding(ctx.mesh, P(*spec))
+
+    return jax.tree.map(leaf, batch)
+
+
+def decode_structs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    s_enc = max(s // 4, 8) if cfg.encoder_layers else 0
+    token = sds((b,), jnp.int32)
+    pos = sds((), jnp.int32)
+    cache = cache_struct(cfg, b, s, s_enc)
+    return token, pos, cache
+
+
+def cache_shardings(cache, batch: int, ctx: Ctx):
+    return jax.tree.map(
+        lambda x: NamedSharding(ctx.mesh, cache_spec(x.shape, batch, ctx)),
+        cache, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cell(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    return cfg, shape

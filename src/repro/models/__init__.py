@@ -1,0 +1,9 @@
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.sharding import Ctx
+from repro.models.transformer import (cache_struct, decode_step,
+                                      forward_train, init_cache, init_params,
+                                      prefill)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "Ctx", "init_params",
+           "forward_train", "prefill", "decode_step", "cache_struct",
+           "init_cache"]

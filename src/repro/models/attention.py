@@ -1,0 +1,172 @@
+"""Attention: blockwise (flash-style) training/prefill attention, GQA,
+sliding-window, decode-with-KV-cache, and MLA (DeepSeek-V2).
+
+The blockwise implementation is a pure-JAX double `lax.scan` (outer over
+query blocks, inner over KV blocks) with online softmax, so the S×S score
+matrix is never materialized — prefill_32k and train_4k fit on chip.
+Causality/windowing are handled by masking (the causal half-waste is
+visible in the roofline's MODEL_FLOPS/HLO_FLOPs ratio and is a recorded
+hillclimb item).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = np.float32(-1e30)
+
+
+def _block_attn(q, k, v, qpos, kpos, scale, causal, window):
+    """One (q-block, kv-block) tile.  q: (B,bq,Hkv,G,dk) k: (B,bk,Hkv,dk)
+    v: (B,bk,Hkv,dv).  Returns scores-softmax partials (m, l, acc)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones(s.shape[-2:], dtype=bool)
+    dpos = qpos[:, None] - kpos[None, :]
+    if causal:
+        mask &= dpos >= 0
+    if window is not None:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    return s
+
+
+def naive_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None,
+                    scale: float | None = None) -> jax.Array:
+    """Reference S×S attention (used by the dry-run cost probes: the
+    blockwise double-scan is a while loop whose body HloCostAnalysis counts
+    once — this form exposes every FLOP to the analyzer)."""
+    b, sq, h, dk = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else dk ** -0.5
+    qg = q.reshape(b, sq, hkv, g, dk)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), dtype=bool)
+    dpos = qpos[:, None] - kpos[None, :]
+    if causal:
+        mask &= dpos >= 0
+    if window is not None:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True,
+                        window: int | None = None,
+                        q_block: int = 256, kv_block: int = 512,
+                        scale: float | None = None,
+                        unroll: bool = False) -> jax.Array:
+    """q: (B,S,H,dk), k: (B,Sk,Hkv,dk), v: (B,Sk,Hkv,dv) -> (B,S,H,dv)."""
+    if unroll:
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               scale=scale)
+    b, sq, h, dk = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = scale if scale is not None else dk ** -0.5
+
+    def _fit(block, s):
+        # largest divisor of s not exceeding the requested block size
+        # (VLM cells prepend patches: S = 4096 + 256 = 4352 = 256·17)
+        block = min(block, s)
+        while s % block:
+            block -= 1
+        return block
+
+    q_block = _fit(q_block, sq)
+    kv_block = _fit(kv_block, sk)
+    nq, nk = sq // q_block, sk // kv_block
+
+    qb = q.reshape(b, nq, q_block, hkv, g, dk)
+    kb = k.reshape(b, nk, kv_block, hkv, dk)
+    vb = v.reshape(b, nk, kv_block, hkv, dv)
+
+    def q_step(_, qi):
+        qt, qoff = qi                                     # (B,bq,Hkv,G,dk)
+        qpos = qoff + jnp.arange(q_block)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kt, vt, koff = ki
+            kpos = koff + jnp.arange(kv_block)
+            s = _block_attn(qt, kt, vt, qpos, kpos, scale, causal, window)
+            m_new = jnp.maximum(m, s.max(axis=-1))        # (B,Hkv,G,bq)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vt.dtype), vt,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_block), NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, dv), jnp.float32)
+        koffs = jnp.arange(nk) * kv_block
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), koffs))
+        out = acc / jnp.maximum(l[..., None], 1e-20)      # (B,Hkv,G,bq,dv)
+        return None, out
+
+    qoffs = jnp.arange(nq) * q_block
+    _, outs = jax.lax.scan(q_step, None,
+                           (qb.transpose(1, 0, 2, 3, 4, 5), qoffs))
+    # outs: (nq, B, Hkv, G, bq, dv) -> (B, S, H, dv)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: (B,H,dk); k_cache: (B,Smax,Hkv,dk); v_cache: (B,Smax,Hkv,dv);
+    cache_len: int32 scalar (valid prefix length, the new token included).
+    """
+    b, h, dk = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else dk ** -0.5
+    qg = q.reshape(b, hkv, g, dk)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    valid = pos < cache_len
+    if window is not None:
+        valid &= pos >= cache_len - window
+    s = jnp.where(valid[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, -1).astype(q.dtype)
+
+
+def mla_decode_scores(q_nope_abs, q_pe, ckv_cache, kpe_cache, cache_len,
+                      scale: float):
+    """Absorbed MLA decode: score against the *compressed* cache.
+
+    q_nope_abs: (B,H,kv_lora)  — q_nope @ w_uk absorbed
+    q_pe: (B,H,rope_dim); ckv_cache: (B,Smax,kv_lora); kpe_cache:(B,Smax,rd).
+    Returns attention weights (B,H,Smax).
+    """
+    s = (jnp.einsum("bhl,bkl->bhk", q_nope_abs, ckv_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhr,bkr->bhk", q_pe, kpe_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    pos = jnp.arange(ckv_cache.shape[1])
+    s = jnp.where((pos < cache_len)[None, None], s, NEG)
+    return jax.nn.softmax(s, axis=-1)

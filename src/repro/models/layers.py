@@ -1,0 +1,67 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0, fraction: float = 1.0):
+    """Rotary embedding over the leading `fraction` of the head dims.
+
+    x: (..., S, H, hd); positions: broadcastable (..., S).
+    fraction=0.5 gives the ChatGLM-style 2D/partial rotary.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    if rot % 2:
+        rot -= 1
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    freqs = jnp.asarray(rope_freqs(rot, theta))           # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def mlp_apply(x, p, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d_model ** -0.5
+    p = {
+        "w_up": jax.random.normal(k1, (d_model, d_ff), dtype) * std,
+        "w_down": jax.random.normal(k2, (d_ff, d_model), dtype) * (d_ff ** -0.5),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * std
+    return p
+
+
+def dense_init(key, shape, dtype, scale_axis: int = 0):
+    std = shape[scale_axis] ** -0.5
+    return jax.random.normal(key, shape, dtype) * std

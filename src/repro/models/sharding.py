@@ -1,0 +1,126 @@
+"""Sharding context + GSPMD partition specs.
+
+Parallelism layout (DESIGN.md §5):
+  * TP   — last dim of every weight matrix over `model` (heads / FFN hidden
+           / expert FFN / vocab);
+  * FSDP — second-to-last dim over the batch axes (`pod`+`data`): params and
+           optimizer state live sharded, XLA all-gathers per layer (ZeRO-3);
+  * DP   — batch over (`pod`,`data`).
+
+Specs are rule-based on leaf shapes with divisibility guards, so the same
+code shards a 236B MoE and a 125M SSM; KV caches get explicit specs
+(batch→data, kv-heads→model, falling back to sequence→data for the
+global_batch=1 long-context cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Ctx:
+    mesh: Optional[Any] = None
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(__import__("numpy").prod(
+            [self.mesh.shape[a] for a in self.dp_axes]))
+
+    @property
+    def tp_size(self) -> int:
+        return 1 if self.mesh is None else self.mesh.shape[self.tp_axis]
+
+    def constraint(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def leaf_spec(shape: tuple[int, ...], ctx: Ctx, *, stacked: bool) -> P:
+    """Generic FSDP+TP spec for a parameter leaf.
+
+    REPRO_NO_FSDP=1 disables the data-axis (ZeRO) sharding — the right
+    call for small models where the per-layer param all-gather costs more
+    than the replicated-param memory (a §Perf hillclimb lever)."""
+    import os
+
+    if ctx.mesh is None:
+        return P()
+    nd = len(shape)
+    spec: list = [None] * nd
+    lo = 1 if stacked else 0       # leading layer-stack dim never sharded
+    if nd - lo >= 1 and shape[-1] % ctx.tp_size == 0 and shape[-1] >= ctx.tp_size * 8:
+        spec[-1] = ctx.tp_axis
+    if (os.environ.get("REPRO_NO_FSDP") != "1" and nd - lo >= 2
+            and shape[-2] % ctx.dp_size == 0
+            and shape[-2] >= ctx.dp_size * 8):
+        spec[-2] = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    return P(*spec)
+
+
+def param_specs(params, ctx: Ctx):
+    """Pytree of PartitionSpecs matching `params`.  Leaves under 'blocks'
+    are layer-stacked (leading reps axis)."""
+
+    def rec(tree, stacked: bool):
+        if isinstance(tree, dict):
+            return {k: rec(v, stacked or k == "blocks") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [rec(v, stacked) for v in tree]
+            return type(tree)(t)
+        if hasattr(tree, "shape"):
+            return leaf_spec(tuple(tree.shape), ctx, stacked=stacked)
+        return P()
+
+    return rec(params, False)
+
+
+def shardings_for(params, ctx: Ctx):
+    if ctx.mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), param_specs(params, ctx),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(ctx: Ctx):
+    """The PartitionSpec *entry* for the batch dimension (str or tuple)."""
+    return ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+
+
+def cache_spec(shape: tuple[int, ...], batch: int, ctx: Ctx) -> P:
+    """KV/state cache leaf spec: (R, B, S, heads, hd)-style layouts.
+
+    Batch shards over dp when divisible; otherwise (global_batch=1 long
+    context) the longest remaining dim shards over dp.  Head-like dims
+    shard over model when divisible."""
+    if ctx.mesh is None:
+        return P()
+    nd = len(shape)
+    spec: list = [None] * nd
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    dp_used = False
+    if nd >= 2 and shape[1] == batch and batch % ctx.dp_size == 0:
+        spec[1] = dp
+        dp_used = True
+    # model axis on the largest remaining divisible dim (prefer later dims:
+    # heads / feature); fall back dp onto sequence for batch=1 cells.
+    for i in range(nd - 1, 1, -1):
+        if spec[i] is None and shape[i] % ctx.tp_size == 0 and shape[i] >= ctx.tp_size:
+            spec[i] = ctx.tp_axis
+            break
+    if not dp_used:
+        # shard the longest unsharded dim (the sequence) over dp
+        cand = max((i for i in range(1, nd) if spec[i] is None),
+                   key=lambda i: shape[i], default=None)
+        if cand is not None and shape[cand] % ctx.dp_size == 0:
+            spec[cand] = dp
+    return P(*spec)

@@ -1,0 +1,127 @@
+"""Mamba-1 selective SSM block (Jamba's sequence mixer).
+
+Training/prefill uses a chunked scan: sequential `lax.scan` over chunks of
+the sequence with a parallel `associative_scan` inside each chunk, so the
+(B, S, d_inner, d_state) discretized tensors are only ever materialized one
+chunk at a time (the whole-sequence version is ~TBs at train_4k scale).
+Decode is the O(1) single-step recurrence — this is what makes the
+long_500k cell feasible for SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+
+
+def mamba_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    rank = max(1, d // 16)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_xproj": dense_init(ks[2], (di, rank + 2 * cfg.ssm_state), dtype),
+        "w_dt": dense_init(ks[3], (rank, di), dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, cfg.ssm_state + 1,
+                                             dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], (di, d), dtype, scale_axis=0),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,di), w: (K,di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssm_params(x1, p, cfg):
+    rank = p["w_dt"].shape[0]
+    proj = x1 @ p["w_xproj"]
+    dt, bmat, cmat = jnp.split(proj, [rank, rank + cfg.ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["w_dt"] + p["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])                                  # (di, state)
+    return dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32), a
+
+
+def mamba_forward(x, p, cfg, chunk: int = 16):
+    """x: (B, S, D) -> (B, S, D).  Chunked selective scan."""
+    b, s, d = x.shape
+    if cfg.unroll:
+        chunk = max(s // 4, 1)   # few unrolled chunks for the cost probes
+    di = cfg.ssm_expand * d
+    xz = x @ p["w_in"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = jax.nn.silu(_causal_conv(x1, p["conv_w"], p["conv_b"]))
+    dt, bmat, cmat, a = _ssm_params(x1, p, cfg)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    x1c, dtc, bc, cc = map(to_chunks, (x1, dt, bmat, cmat))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        x1_, dt_, b_, c_ = inp                        # (B, c, ...)
+        da = jnp.exp(dt_[..., None] * a)              # (B,c,di,state)
+        dbx = (dt_ * x1_.astype(jnp.float32))[..., None] * b_[:, :, None, :]
+        acum, bcum = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        hs = acum * h[:, None] + bcum                 # states at each step
+        y = jnp.einsum("bcds,bcs->bcd", hs, c_)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    if cfg.unroll:
+        # cost probes: straight-line chunk loop (exact HLO accounting)
+        hh, ylist = h0, []
+        for i in range(nc):
+            hh, yc = chunk_step(hh, (x1c[i], dtc[i], bc[i], cc[i]))
+            ylist.append(yc)
+        ys = jnp.stack(ylist)
+    else:
+        _, ys = jax.lax.scan(chunk_step, h0, (x1c, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = (y + p["d_skip"] * x1.astype(jnp.float32)).astype(x.dtype)
+    return (y * jax.nn.silu(z)) @ p["w_out"]
+
+
+def mamba_decode_init(cfg, batch, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(x, state, p, cfg):
+    """x: (B, D) one token; state: {'h','conv'} -> (y (B,D), new state)."""
+    xz = x @ p["w_in"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    conv_in = jnp.concatenate([state["conv"], x1[:, None]], axis=1)
+    x1 = jax.nn.silu((conv_in * p["conv_w"]).sum(axis=1) + p["conv_b"])
+    dt, bmat, cmat, a = _ssm_params(x1[:, None], p, cfg)
+    dt, bmat, cmat = dt[:, 0], bmat[:, 0], cmat[:, 0]
+    da = jnp.exp(dt[..., None] * a)
+    dbx = (dt * x1.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    h = da * state["h"] + dbx
+    y = jnp.einsum("bds,bs->bd", h, cmat)
+    y = (y + p["d_skip"] * x1.astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["w_out"]
+    return out, {"h": h, "conv": conv_in[:, 1:]}

@@ -1,0 +1,538 @@
+"""Composable block stacks for all assigned architecture families.
+
+A model is `embed -> scan over pattern-repeats -> final norm -> lm head`.
+Each repeat applies the config's block `pattern` (e.g. Jamba's
+mamba/attn/MoE interleave) with per-position parameters stacked over
+repeats, so the HLO contains ONE copy of each block kind regardless of
+depth — essential for 512-device dry-run compile times.
+
+Modes: train/encode (full sequence), prefill (full sequence + emits KV /
+state caches), decode (single token + cache update).  Remat
+(`jax.checkpoint`) wraps the repeat body in training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, mlp_apply, mlp_init, rms_norm
+from repro.models.sharding import Ctx, batch_spec
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg: ModelConfig, dtype):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], (d, h * hd), dtype),
+        "w_k": dense_init(ks[1], (d, hkv * hd), dtype),
+        "w_v": dense_init(ks[2], (d, hkv * hd), dtype),
+        "w_o": dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h * hd,), dtype)
+        p["b_k"] = jnp.zeros((hkv * hd,), dtype)
+        p["b_v"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _mla_init(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rd, dv = cfg.hd, cfg.rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, cfg.q_lora), dtype),
+        "q_ln": jnp.ones((cfg.q_lora,), dtype),
+        "w_uq": dense_init(ks[1], (cfg.q_lora, h * (nope + rd)), dtype),
+        "w_dkv": dense_init(ks[2], (d, cfg.kv_lora + rd), dtype),
+        "kv_ln": jnp.ones((cfg.kv_lora,), dtype),
+        "w_uk": dense_init(ks[3], (cfg.kv_lora, h, nope), dtype),
+        "w_uv": dense_init(ks[4], (cfg.kv_lora, h, dv), dtype),
+        "w_o": dense_init(ks[5], (h * dv, d), dtype),
+    }
+
+
+def _block_init(key, cfg: ModelConfig, kind: str, is_moe: bool, dtype,
+                cross: bool = False):
+    ks = jax.random.split(key, 5)
+    p: dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["mixer"] = _attn_init(ks[0], cfg, dtype)
+    elif kind == "mla":
+        p["mixer"] = _mla_init(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mixer"] = SSM.mamba_init(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mixer"] = XL.mlstm_init(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mixer"] = XL.slstm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["cross"] = _attn_init(ks[2], cfg, dtype)
+        p["ln_cross"] = jnp.ones((cfg.d_model,), dtype)
+    if kind in ("attn", "mla", "mamba") and (cfg.d_ff > 0 or is_moe):
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = (MOE.moe_init(ks[1], cfg, dtype) if is_moe
+                    else mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype))
+    return p
+
+
+def _pattern_info(cfg: ModelConfig):
+    plen = len(cfg.pattern)
+    assert cfg.n_layers % plen == 0, (cfg.name, cfg.n_layers, plen)
+    if cfg.moe:
+        assert plen % cfg.moe_every == 0 or cfg.moe_every % plen == 0 or plen == 1
+    reps = cfg.n_layers // plen
+    moe_flags = [cfg.is_moe_layer(j) for j in range(plen)]
+    return plen, reps, moe_flags
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    plen, reps, moe_flags = _pattern_info(cfg)
+    keys = jax.random.split(key, 8)
+    cross = cfg.encoder_layers > 0
+    blocks = []
+    for j in range(plen):
+        bkeys = jax.random.split(jax.random.fold_in(keys[0], j), reps)
+        blocks.append(jax.vmap(
+            lambda k: _block_init(k, cfg, cfg.pattern[j], moe_flags[j],
+                                  dtype, cross=cross))(bkeys))
+    params: dict[str, Any] = {
+        "embed": dense_init(keys[1], (cfg.vocab, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "blocks": tuple(blocks),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[2], (cfg.d_model, cfg.vocab), dtype)
+    if cfg.encoder_layers > 0:
+        ekeys = jax.random.split(keys[3], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": (jax.vmap(
+                lambda k: _block_init(k, cfg, "attn", False, dtype))(ekeys),),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache structure
+# ---------------------------------------------------------------------------
+
+def _block_cache_struct(cfg: ModelConfig, kind: str, batch: int, smax: int,
+                        s_enc: int, cross: bool, dtype):
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    di = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    hd_m = cfg.d_model // cfg.n_heads
+    if kind == "attn":
+        c = {"k": ((batch, smax, hkv, hd), dtype),
+             "v": ((batch, smax, hkv, hd), dtype)}
+    elif kind == "mla":
+        c = {"ckv": ((batch, smax, cfg.kv_lora), dtype),
+             "kpe": ((batch, smax, cfg.rope_dim), dtype)}
+    elif kind == "mamba":
+        c = {"h": ((batch, di, cfg.ssm_state), jnp.float32),
+             "conv": ((batch, cfg.ssm_conv - 1, di), dtype)}
+    elif kind == "mlstm":
+        c = {"c": ((batch, h, hd_m, hd_m), jnp.float32),
+             "n": ((batch, h, hd_m), jnp.float32),
+             "m": ((batch, h), jnp.float32)}
+    elif kind == "slstm":
+        d = cfg.d_model
+        c = {"c": ((batch, d), jnp.float32), "n": ((batch, d), jnp.float32),
+             "m": ((batch, d), jnp.float32), "h": ((batch, d), jnp.float32)}
+    else:
+        raise ValueError(kind)
+    if cross:
+        c["ck"] = ((batch, s_enc, hkv, hd), dtype)
+        c["cv"] = ((batch, s_enc, hkv, hd), dtype)
+    return c
+
+
+def cache_struct(cfg: ModelConfig, batch: int, smax: int,
+                 s_enc: int = 0) -> Any:
+    """Pytree of ShapeDtypeStructs for the decode cache."""
+    plen, reps, _ = _pattern_info(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    cross = cfg.encoder_layers > 0
+    out = []
+    for j in range(plen):
+        c = _block_cache_struct(cfg, cfg.pattern[j], batch, smax, s_enc,
+                                cross, dtype)
+        out.append(jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((reps,) + sd[0], sd[1]),
+            c, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple)))
+    return tuple(out)
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int, s_enc: int = 0):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        cache_struct(cfg, batch, smax, s_enc),
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _rope_frac(cfg):
+    return {"default": 1.0, "half": 0.5, "none": 0.0}[cfg.rope]
+
+
+def _qkv(x, p, cfg, positions):
+    b = x.shape[0]
+    s = x.shape[1]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["w_q"] + (p["b_q"] if "b_q" in p else 0)
+    k = x @ p["w_k"] + (p["b_k"] if "b_k" in p else 0)
+    v = x @ p["w_v"] + (p["b_v"] if "b_v" in p else 0)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    fr = _rope_frac(cfg)
+    if fr > 0:
+        q = _ap(q, positions, cfg, fr)
+        k = _ap(k, positions, cfg, fr)
+    return q, k, v
+
+
+def _ap(t, positions, cfg, fr):
+    from repro.models.layers import apply_rope
+
+    return apply_rope(t, positions, theta=cfg.rope_theta, fraction=fr)
+
+
+def _attn_full(x, p, cfg, ctx, positions, causal):
+    window = cfg.window if cfg.attn == "swa" else None
+    q, k, v = _qkv(x, p, cfg, positions)
+    out = A.blockwise_attention(
+        q, k, v, causal=causal, window=window,
+        unroll=cfg.unroll and cfg.attn_impl == "naive")
+    out = out.reshape(x.shape[0], x.shape[1], -1) @ p["w_o"]
+    return out, (k, v)
+
+
+def _attn_decode(x, p, cfg, cache, pos):
+    b = x.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = jnp.asarray(pos)[None]
+    q, k, v = _qkv(x[:, None], p, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    window = cfg.window if cfg.attn == "swa" else None
+    out = A.decode_attention(q[:, 0], k_cache, v_cache, pos + 1, window=window)
+    out = out.reshape(b, -1) @ p["w_o"]
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k_cache, v_cache
+    return out, new_cache
+
+
+def _mla_proj_q(x, p, cfg):
+    b, s = x.shape[0], x.shape[1]
+    h, nope, rd = cfg.n_heads, cfg.hd, cfg.rope_dim
+    cq = rms_norm(x @ p["w_dq"], p["q_ln"])
+    q = (cq @ p["w_uq"]).reshape(b, s, h, nope + rd)
+    return q[..., :nope], q[..., nope:]
+
+
+def _mla_full(x, p, cfg, ctx, positions, causal):
+    b, s = x.shape[0], x.shape[1]
+    h, nope, rd, dv = cfg.n_heads, cfg.hd, cfg.rope_dim, cfg.v_head_dim
+    q_nope, q_pe = _mla_proj_q(x, p, cfg)
+    q_pe = _ap(q_pe, positions, cfg, 1.0)
+    ckv_full = x @ p["w_dkv"]
+    ckv, kpe = ckv_full[..., :cfg.kv_lora], ckv_full[..., cfg.kv_lora:]
+    ckv_n = rms_norm(ckv, p["kv_ln"])
+    kpe = _ap(kpe[:, :, None, :], positions, cfg, 1.0)[:, :, 0]
+    k_nope = jnp.einsum("bsl,lhn->bshn", ckv_n, p["w_uk"])
+    v = jnp.einsum("bsl,lhn->bshn", ckv_n, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(kpe[:, :, None], (b, s, h, rd))],
+                        axis=-1)
+    out = A.blockwise_attention(
+        q, k, v, causal=causal,
+        unroll=cfg.unroll and cfg.attn_impl == "naive")
+    out = out.reshape(b, s, -1) @ p["w_o"]
+    return out, (ckv_n, kpe)
+
+
+def _mla_decode(x, p, cfg, cache, pos):
+    b = x.shape[0]
+    h, nope, rd, dv = cfg.n_heads, cfg.hd, cfg.rope_dim, cfg.v_head_dim
+    positions = jnp.asarray(pos)[None]
+    q_nope, q_pe = _mla_proj_q(x[:, None], p, cfg)
+    q_pe = _ap(q_pe, positions, cfg, 1.0)[:, 0]
+    q_nope = q_nope[:, 0]
+    ckv_full = x @ p["w_dkv"]
+    ckv, kpe = ckv_full[..., :cfg.kv_lora], ckv_full[..., cfg.kv_lora:]
+    ckv_n = rms_norm(ckv, p["kv_ln"])
+    kpe = _ap(kpe[:, None, None, :], positions, cfg, 1.0)[:, 0, 0]
+    ckv_cache = jax.lax.dynamic_update_slice(cache["ckv"], ckv_n[:, None],
+                                             (0, pos, 0))
+    kpe_cache = jax.lax.dynamic_update_slice(cache["kpe"], kpe[:, None],
+                                             (0, pos, 0))
+    # absorbed attention against the compressed cache
+    q_abs = jnp.einsum("bhn,lhn->bhl", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    w = A.mla_decode_scores(q_abs, q_pe.astype(jnp.float32),
+                            ckv_cache.astype(jnp.float32),
+                            kpe_cache.astype(jnp.float32), pos + 1,
+                            (nope + rd) ** -0.5)
+    out_c = jnp.einsum("bhk,bkl->bhl", w, ckv_cache.astype(jnp.float32))
+    out = jnp.einsum("bhl,lhn->bhn", out_c, p["w_uv"].astype(jnp.float32))
+    out = out.reshape(b, -1).astype(x.dtype) @ p["w_o"]
+    new_cache = dict(cache)
+    new_cache["ckv"], new_cache["kpe"] = ckv_cache, kpe_cache
+    return out, new_cache
+
+
+def _cross_attn(x, p, ln, enc_kv, cfg):
+    """Cross attention over precomputed encoder K/V."""
+    b, s = x.shape[0], x.shape[1]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    hx = rms_norm(x, ln)
+    q = (hx @ p["w_q"]).reshape(b, s, h, hd)
+    k, v = enc_kv
+    out = A.blockwise_attention(q, k, v, causal=False)
+    return out.reshape(b, s, -1) @ p["w_o"]
+
+
+def block_apply(x, p, kind, cfg, ctx, *, positions, mode, is_moe,
+                causal=True, cache=None, pos=None, enc_out=None):
+    """Returns (x, new_cache_dict)."""
+    h = rms_norm(x, p["ln1"])
+    new_cache: dict[str, Any] = {}
+    if mode == "decode":
+        new_cache = dict(cache)
+        if kind == "attn":
+            out, new_cache = _attn_decode(h, p["mixer"], cfg, cache, pos)
+        elif kind == "mla":
+            out, new_cache = _mla_decode(h, p["mixer"], cfg, cache, pos)
+        elif kind == "mamba":
+            st = {"h": cache["h"], "conv": cache["conv"]}
+            out, st = SSM.mamba_decode(h, st, p["mixer"], cfg)
+            new_cache.update(st)
+        elif kind == "mlstm":
+            st = {k_: cache[k_] for k_ in ("c", "n", "m")}
+            out, st = XL.mlstm_decode(h, st, p["mixer"], cfg)
+            new_cache.update(st)
+        elif kind == "slstm":
+            st = {k_: cache[k_] for k_ in ("c", "n", "m", "h")}
+            out, st = XL.slstm_decode(h, st, p["mixer"], cfg)
+            new_cache.update(st)
+        x = x + out
+        if "cross" in p:
+            ck, cv = cache["ck"], cache["cv"]
+            out = _cross_attn(x[:, None], p["cross"], p["ln_cross"],
+                              (ck, cv), cfg)[:, 0]
+            x = x + out
+        if "ffn" in p:
+            h2 = rms_norm(x, p["ln2"])
+            if is_moe:
+                f = MOE.moe_ffn(h2[:, None], p["ffn"], cfg, ctx)[:, 0]
+            else:
+                f = mlp_apply(h2, p["ffn"], cfg.mlp)
+            x = x + f
+        return x, new_cache
+
+    # ---- full-sequence modes (train / encode / prefill) ---------------------
+    if kind == "attn":
+        out, (k, v) = _attn_full(h, p["mixer"], cfg, ctx, positions, causal)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    elif kind == "mla":
+        out, (ckv, kpe) = _mla_full(h, p["mixer"], cfg, ctx, positions, causal)
+        if mode == "prefill":
+            new_cache = {"ckv": ckv, "kpe": kpe}
+    elif kind == "mamba":
+        out = SSM.mamba_forward(h, p["mixer"], cfg)
+        if mode == "prefill":
+            # recompute the decode-entry state cheaply from the tail
+            st0 = SSM.mamba_decode_init(cfg, x.shape[0], x.dtype)
+            new_cache = st0  # placeholder state; exact state handoff is a
+            # serving-layer concern (decode cells start from a given cache)
+    elif kind == "mlstm":
+        out = XL.mlstm_forward(h, p["mixer"], cfg)
+        if mode == "prefill":
+            new_cache = XL.mlstm_decode_init(cfg, x.shape[0], p["mixer"])
+    elif kind == "slstm":
+        out = XL.slstm_forward(h, p["mixer"], cfg)
+        if mode == "prefill":
+            new_cache = XL.slstm_decode_init(cfg, x.shape[0], p["mixer"])
+    x = x + out
+    if "cross" in p and enc_out is not None:
+        k_enc = (enc_out @ p["cross"]["w_k"]).reshape(
+            x.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        v_enc = (enc_out @ p["cross"]["w_v"]).reshape(
+            x.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        x = x + _cross_attn(x, p["cross"], p["ln_cross"], (k_enc, v_enc), cfg)
+        if mode == "prefill":
+            new_cache["ck"], new_cache["cv"] = k_enc, v_enc
+    if "ffn" in p:
+        h2 = rms_norm(x, p["ln2"])
+        f = (MOE.moe_ffn(h2, p["ffn"], cfg, ctx) if is_moe
+             else mlp_apply(h2, p["ffn"], cfg.mlp))
+        x = x + f
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def run_stack(x, blocks, cfg: ModelConfig, ctx: Ctx, *, positions, mode,
+              causal=True, caches=None, pos=None, enc_out=None,
+              pattern=None, moe_flags=None, remat=False):
+    pattern = pattern if pattern is not None else cfg.pattern
+    if moe_flags is None:
+        _, _, moe_flags = _pattern_info(cfg)
+
+    import os
+    block_constraint = os.environ.get("REPRO_BLOCK_CONSTRAINT") == "1"
+
+    def rep_body(carry, inp):
+        xx = carry
+        rep_params, rep_cache = inp
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            cj = rep_cache[j] if rep_cache is not None else None
+            xx, nc = block_apply(xx, rep_params[j], kind, cfg, ctx,
+                                 positions=positions, mode=mode,
+                                 is_moe=moe_flags[j], causal=causal,
+                                 cache=cj, pos=pos, enc_out=enc_out)
+            if block_constraint and xx.ndim == 3:
+                # §Perf D4: pin the residual stream to (batch over dp,
+                # replicated over model) after every block — stops GSPMD
+                # resharding churn (f32 activation all-gathers) between
+                # differently-sharded weight contractions.
+                xx = ctx.constraint(xx, P(batch_spec(ctx), None, None))
+            new_caches.append(nc)
+        return xx, tuple(new_caches)
+
+    body = jax.checkpoint(rep_body) if remat else rep_body
+    xs = (blocks, caches)
+    if cfg.unroll:
+        reps = jax.tree.leaves(blocks)[0].shape[0]
+        outs = []
+        for r in range(reps):
+            rep_xs = jax.tree.map(lambda t: t[r], xs)
+            x, ys = body(x, rep_xs)
+            outs.append(ys)
+        new_caches = (jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+                      if outs and jax.tree.leaves(outs[0]) else outs[0]
+                      if outs else None)
+        return x, (new_caches if caches is not None or mode == "prefill"
+                   else None)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, (new_caches if caches is not None or mode == "prefill" else None)
+
+
+def _embed(params, tokens, cfg, ctx: Ctx, batch_extra=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if batch_extra is not None:       # vlm patches / prepended embeddings
+        x = jnp.concatenate([batch_extra.astype(x.dtype), x], axis=1)
+    x = ctx.constraint(x, P(batch_spec(ctx), None, None))
+    return x
+
+
+def _logits(params, x, cfg, ctx: Ctx):
+    import os
+
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    if os.environ.get("REPRO_HEAD_RESHARD") == "1" and ctx.mesh is not None:
+        # §Perf D-series: the head's contraction (D) dim is FSDP-sharded;
+        # left alone, GSPMD psums the full f32 (B,S,V) logits over `data`
+        # (~40 GB/dev for qwen) — reshard the *weight* instead (one ~20 MB
+        # all-gather) so the contraction dim is local and logits come out
+        # model-sharded with no activation collective.
+        head = ctx.constraint(head, P(None, ctx.tp_axis))
+    logits = x @ head
+    return ctx.constraint(logits, P(batch_spec(ctx), None, ctx.tp_axis))
+
+
+def _encode(params, frames, cfg, ctx):
+    positions = jnp.arange(frames.shape[1])
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x, _ = run_stack(x, params["encoder"]["blocks"], cfg, ctx,
+                     positions=positions, mode="encode", causal=False,
+                     caches=None, pattern=("attn",),
+                     moe_flags=[False])
+    return rms_norm(x, params["encoder"]["final_norm"])
+
+
+def cast_params(params, cfg: ModelConfig):
+    """Cast float params to the compute dtype (differentiable: grads flow
+    back to the f32 masters held by the optimizer)."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def leaf(p):
+        if hasattr(p, "dtype") and jnp.issubdtype(p.dtype, jnp.floating) \
+                and p.dtype != dt:
+            return p.astype(dt)
+        return p
+
+    return jax.tree.map(leaf, params)
+
+
+def forward_train(params, batch, cfg: ModelConfig, ctx: Ctx):
+    """batch: {'tokens': (B,S) int32, optional 'patch_embeds', 'frames'}."""
+    params = cast_params(params, cfg)
+    tokens = batch["tokens"]
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = _encode(params, batch["frames"], cfg, ctx)
+    extra = batch.get("patch_embeds")
+    x = _embed(params, tokens, cfg, ctx, extra)
+    positions = jnp.arange(x.shape[1])
+    x, _ = run_stack(x, params["blocks"], cfg, ctx, positions=positions,
+                     mode="train", causal=True, caches=None,
+                     enc_out=enc_out, remat=True)
+    return _logits(params, x, cfg, ctx)
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: Ctx):
+    params = cast_params(params, cfg)
+    tokens = batch["tokens"]
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = _encode(params, batch["frames"], cfg, ctx)
+    extra = batch.get("patch_embeds")
+    x = _embed(params, tokens, cfg, ctx, extra)
+    positions = jnp.arange(x.shape[1])
+    x, caches = run_stack(x, params["blocks"], cfg, ctx, positions=positions,
+                          mode="prefill", causal=True, caches=None,
+                          enc_out=enc_out)
+    logits = _logits(params, x[:, -1:], cfg, ctx)
+    return logits[:, 0], caches
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig, ctx: Ctx):
+    """token: (B,) int32; pos: int32 scalar; cache: pytree from
+    cache_struct().  Returns (logits (B,V), new cache)."""
+    params = cast_params(params, cfg)
+    x = jnp.take(params["embed"], token, axis=0).astype(jnp.dtype(cfg.dtype))
+    x, new_cache = run_stack(x, params["blocks"], cfg, ctx,
+                             positions=None, mode="decode", causal=True,
+                             caches=cache, pos=pos)
+    logits = _logits(params, x[:, None], cfg, ctx)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,180 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent gate connections), with exponential gating + stabilizer state,
+following arXiv:2405.04517.
+
+Training uses `lax.scan` over time (the recurrences are inherently
+sequential for sLSTM; mLSTM's chunkwise-parallel form is a recorded
+optimization item).  Decode is the O(1) per-step recurrence, which is why
+the xlstm/jamba architectures run the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------- mLSTM
+
+def mlstm_init(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 8)
+    return {
+        "w_q": dense_init(ks[0], (d, d), dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype),
+        "w_i": dense_init(ks[3], (d, h), jnp.float32),
+        "w_f": dense_init(ks[4], (d, h), jnp.float32),
+        "w_o": dense_init(ks[5], (d, d), dtype),
+        "w_out": dense_init(ks[6], (d, d), dtype),
+        "f_bias": jnp.ones((h,), jnp.float32) * 3.0,
+    }
+
+
+def _mlstm_step(p, state, qkvif):
+    c, n, m = state                       # (B,H,hd,hd), (B,H,hd), (B,H)
+    q, k, v, ig, fg = qkvif               # q/k/v: (B,H,hd); ig/fg: (B,H)
+    m_new = jnp.maximum(fg + m, ig)
+    i_p = jnp.exp(ig - m_new)[..., None]
+    f_p = jnp.exp(fg + m - m_new)[..., None]
+    c = f_p[..., None] * c + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f_p * n + i_p * k
+    num = jnp.einsum("bhvk,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    return (c, n, m_new), num / den[..., None]
+
+
+def _mlstm_proj(x, p, cfg):
+    b = x.shape[0]
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    shape = x.shape[:-1] + (h, hd)
+    q = (x @ p["w_q"]).reshape(shape).astype(jnp.float32)
+    k = (x @ p["w_k"]).reshape(shape).astype(jnp.float32) * (hd ** -0.5)
+    v = (x @ p["w_v"]).reshape(shape).astype(jnp.float32)
+    ig = x.astype(jnp.float32) @ p["w_i"]
+    fg = jax.nn.log_sigmoid(x.astype(jnp.float32) @ p["w_f"] + p["f_bias"])
+    return q, k, v, ig, fg
+
+
+def mlstm_parallel(x, p, cfg):
+    """Quadratic (chunk-free) parallel form of the mLSTM recurrence — the
+    xLSTM paper's training formulation.  Used for the dry-run cost probes
+    (every FLOP visible to HloCostAnalysis) and as the fast training path
+    for short sequences."""
+    b, s, d = x.shape
+    q, k, v, ig, fg = _mlstm_proj(x, p, cfg)          # (B,S,H,hd)/(B,S,H)
+    q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    ig, fg = ig.transpose(0, 2, 1), fg.transpose(0, 2, 1)   # (B,H,S)
+    lcum = jnp.cumsum(fg, axis=-1)                    # log forget prefix
+    a = ig - lcum
+    m = lcum + jax.lax.cummax(a, axis=a.ndim - 1)     # stabilizer per step
+    logd = (lcum[..., :, None] - lcum[..., None, :]
+            + ig[..., None, :] - m[..., :, None])     # (B,H,S,S)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(causal, jnp.exp(logd), 0.0)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * dmat
+    den = jnp.maximum(jnp.abs(scores.sum(-1)), jnp.exp(-m))
+    y = jnp.einsum("bhqk,bhkd->bhqd", scores / den[..., None], v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    o = jax.nn.sigmoid(x @ p["w_o"])
+    return (y * o) @ p["w_out"]
+
+
+def mlstm_forward(x, p, cfg):
+    """x: (B,S,D) -> (B,S,D)."""
+    if cfg.unroll:
+        return mlstm_parallel(x, p, cfg)
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    q, k, v, ig, fg = _mlstm_proj(x, p, cfg)
+
+    def step(state, inp):
+        return _mlstm_step(p, state, inp)
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3) if t.ndim == 4 else t.transpose(1, 0, 2)
+               for t in (q, k, v, ig, fg))
+    _, ys = jax.lax.scan(step, (c0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    o = jax.nn.sigmoid(x @ p["w_o"])
+    return (y * o) @ p["w_out"]
+
+
+def mlstm_decode_init(cfg, batch, p):
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(x, state, p, cfg):
+    q, k, v, ig, fg = _mlstm_proj(x[:, None], p, cfg)
+    sel = lambda t: t[:, 0]
+    (c, n, m), y = _mlstm_step(
+        p, (state["c"], state["n"], state["m"]),
+        (sel(q), sel(k), sel(v), sel(ig), sel(fg)))
+    y = y.reshape(x.shape).astype(x.dtype)
+    o = jax.nn.sigmoid(x @ p["w_o"])
+    return (y * o) @ p["w_out"], {"c": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------- sLSTM
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "w": dense_init(ks[0], (d, 4 * d), dtype),
+        "r": dense_init(ks[1], (d, 4 * d), dtype),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _slstm_step(p, state, wx):
+    c, n, m, h = state                      # all (B, D) f32
+    pre = (wx + h.astype(wx.dtype) @ p["r"]).astype(jnp.float32) + p["b"]
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    lf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(lf + m, ii)
+    i_p = jnp.exp(ii - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_forward(x, p, cfg):
+    b, s, d = x.shape
+    wx = x @ p["w"]
+
+    def step(state, inp):
+        return _slstm_step(p, state, inp)
+
+    z = jnp.zeros((b, d), jnp.float32)
+    _, ys = jax.lax.scan(step, (z, z, z - 1e30, z), wx.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    return y @ p["w_out"]
+
+
+def slstm_decode_init(cfg, batch, p):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": z - 1e30, "h": z}
+
+
+def slstm_decode(x, state, p, cfg):
+    wx = x @ p["w"]
+    (c, n, m, h), y = _slstm_step(
+        p, (state["c"], state["n"], state["m"], state["h"]), wx)
+    return y.astype(x.dtype) @ p["w_out"], {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,5 @@
+from repro.relational.loader import Database
+from repro.relational.schema import TPCH_SCHEMAS, days
+from repro.relational.table import Table
+
+__all__ = ["Database", "Table", "TPCH_SCHEMAS", "days"]

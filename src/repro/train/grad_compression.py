@@ -1,0 +1,46 @@
+"""Int8 gradient compression with error feedback.
+
+Per-leaf symmetric int8 quantization of the gradient with a persistent
+error-feedback buffer (residual added back before the next quantization),
+the standard trick that keeps compressed-SGD/Adam convergent.  In a
+multi-pod deployment this transform wraps the *cross-pod* leg of the
+gradient all-reduce (the slow DCI hop): each pod reduces in full precision
+over ICI, quantizes, exchanges int8 over DCI, dequantizes.  On a single
+program the quantize→dequantize round trip is numerically identical to the
+deployed path, so convergence behaviour is testable here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef_buf):
+    """Returns (dequantized grads as seen after the compressed exchange,
+    new error-feedback buffers)."""
+
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = _q8(g32)
+        dq = _dq8(q, s)
+        return dq.astype(g.dtype), g32 - dq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_buf)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

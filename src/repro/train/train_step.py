@@ -1,0 +1,86 @@
+"""The train step: loss, grads, (optional) gradient compression, Adam.
+
+With microbatch accumulation (`accum > 1`) the gradient reduce-scatter of
+microbatch k overlaps microbatch k+1's compute under XLA's latency-hiding
+scheduler — the standard compute/comm overlap at scale.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import Ctx
+from repro.models.transformer import forward_train
+from repro.train.grad_compression import compress_grads, ef_init
+from repro.train.optimizer import AdamConfig, AdamState, adam_init, adam_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    ef: Optional[Any] = None     # error-feedback buffers (compression on)
+
+
+def make_train_state(params, *, compression: bool = False) -> TrainState:
+    return TrainState(params=params, opt=adam_init(params),
+                      ef=ef_init(params) if compression else None)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: Ctx):
+    import os
+
+    logits = forward_train(params, batch, cfg, ctx)
+    targets = batch["targets"]
+    s = targets.shape[1]
+    logits = logits[:, -s:].astype(jnp.float32)   # drop patch positions
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    if os.environ.get("REPRO_LOSS_MODE", "gather") == "onehot":
+        # §Perf: label lookup as a one-hot contraction — partitions cleanly
+        # over the model-sharded vocab axis (no cross-shard gather; XLA
+        # fuses the one-hot into the reduction without materializing it).
+        onehot = jax.nn.one_hot(targets, logits.shape[-1],
+                                dtype=logits.dtype)
+        lab = jnp.sum(logits * onehot, axis=-1)
+    else:
+        lab = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    ce = lse - lab
+    if mask is not None:
+        ce = ce * mask
+        return ce.sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce.mean()
+
+
+def train_step(state: TrainState, batch, cfg: ModelConfig, ctx: Ctx,
+               opt_cfg: AdamConfig = AdamConfig(), accum: int = 1):
+    if accum == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch, cfg, ctx)
+    else:
+        # microbatch accumulation: batch leading dim split into `accum`
+        def micro(carry, mb):
+            acc, lsum = carry
+            l, g = jax.value_and_grad(loss_fn)(state.params, mb, cfg, ctx)
+            return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(accum, b // accum, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            state.params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        loss = lsum / accum
+
+    ef = state.ef
+    if ef is not None:
+        grads, ef = compress_grads(grads, ef)
+
+    new_params, new_opt, gnorm = adam_update(grads, state.opt, state.params,
+                                             opt_cfg)
+    metrics = {"loss": loss, "grad_norm": gnorm, "step": new_opt.step}
+    return TrainState(new_params, new_opt, ef), metrics

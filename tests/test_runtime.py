@@ -1,0 +1,153 @@
+"""Distributed-substrate behaviour: checkpoint/restore round trip, async
+atomicity, fault-tolerant driver recovery, straggler detection, data
+pipeline determinism, gradient compression numerics, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
+                                         restore, save)
+from repro.configs import smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.models import Ctx, init_params
+from repro.runtime.fault_tolerance import StragglerStats, TrainDriver
+from repro.train.grad_compression import compress_grads, ef_init
+from repro.train.optimizer import AdamConfig
+from repro.train.train_step import make_train_state, train_step
+
+CTX = Ctx(mesh=None)
+
+
+@pytest.fixture()
+def tiny():
+    cfg = smoke_config("qwen1_5_0_5b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_checkpoint_roundtrip(tmp_path, tiny):
+    cfg, params = tiny
+    state = make_train_state(params)
+    path = save(str(tmp_path), 7, state)
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+    assert latest_step(str(tmp_path)) == 7
+    restored = restore(str(tmp_path), 7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_async(tmp_path, tiny):
+    cfg, params = tiny
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3):
+        ck.save(step, {"w": jnp.ones((4,)) * step})
+    ck.wait()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000002", "step_00000003"]
+    r = restore(str(tmp_path), 3, {"w": jnp.zeros((4,))})
+    np.testing.assert_array_equal(np.asarray(r["w"]), 3 * np.ones(4))
+
+
+def test_pipeline_determinism_and_sharding():
+    kw = dict(vocab=100, batch=8, seq_len=16, seed=42)
+    p1 = TokenPipeline(**kw)
+    p2 = TokenPipeline(**kw)
+    b1, b2 = p1.batch_at(5), p2.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(5)["tokens"],
+                              p1.batch_at(6)["tokens"])
+    # host sharding: different hosts draw different slices
+    h0 = TokenPipeline(**kw, host=0, n_hosts=2).batch_at(5)
+    h1 = TokenPipeline(**kw, host=1, n_hosts=2).batch_at(5)
+    assert h0["tokens"].shape[0] == 4
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_pipeline_prefetch():
+    p = TokenPipeline(vocab=50, batch=4, seq_len=8)
+    p.start(from_step=3)
+    it = iter(p)
+    s, b = next(it)
+    assert s == 3 and b["tokens"].shape == (4, 8)
+    s2, _ = next(it)
+    assert s2 == 4
+    p.stop()
+
+
+def test_grad_compression_error_feedback(tiny):
+    cfg, params = tiny
+    grads = jax.tree.map(
+        lambda p: jnp.full(p.shape, 1e-3, jnp.float32), params)
+    ef = ef_init(params)
+    total = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    for _ in range(8):
+        dq, ef = compress_grads(grads, ef)
+        total = jax.tree.map(jnp.add, total, dq)
+    # error feedback: accumulated dequantized grads converge to 8 x grads
+    for t, g in zip(jax.tree.leaves(total), jax.tree.leaves(grads)):
+        np.testing.assert_allclose(np.asarray(t), 8 * np.asarray(g),
+                                   rtol=0.02, atol=1e-5)
+
+
+def test_driver_recovers_from_failures(tmp_path, tiny):
+    cfg, params = tiny
+    state = make_train_state(params)
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=2, seq_len=16)
+    stepper = jax.jit(lambda st, b: train_step(
+        st, {k: jnp.asarray(v) for k, v in b.items()}, cfg, CTX,
+        AdamConfig(lr=1e-3)))
+    boom = {"armed": True}
+
+    def fail_hook(step):
+        if step == 5 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("simulated node failure")
+
+    drv = TrainDriver(step_fn=stepper, state=state, pipeline=pipe,
+                      ckpt_dir=str(tmp_path), ckpt_every=2,
+                      fail_hook=fail_hook)
+    final = drv.run(8)
+    assert drv.recoveries == 1
+    assert len([m for m in drv.metrics_log if m["step"] == 7]) >= 1
+    assert int(final.opt.step) > 0
+    losses = [m["loss"] for m in drv.metrics_log]
+    assert all(np.isfinite(losses))
+
+
+def test_straggler_detection():
+    st = StragglerStats(threshold=2.0)
+    for i in range(10):
+        st.observe(i, 0.1)
+    assert st.observe(10, 1.0)          # 10x the EMA -> flagged
+    assert st.slow_steps and st.slow_steps[-1][0] == 10
+    assert not st.observe(11, 0.1)
+
+
+def test_serve_engine_continuous_batching(tiny):
+    from repro.serve.batcher import Request, ServeEngine
+
+    cfg, params = tiny
+    eng = ServeEngine(params, cfg, CTX, slots=2, max_len=32)
+    reqs = [Request(rid=i, prompt=np.arange(3 + i, dtype=np.int32) % cfg.vocab,
+                    max_new=4) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert 1 <= len(r.out) <= r.max_new + 1
+        assert all(0 <= t < cfg.vocab for t in r.out)
+
+
+def test_elastic_restore_reshape(tmp_path):
+    """Restore onto a different (logical) target: dtype/shape adaptation."""
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save(str(tmp_path), 1, tree)
+    like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+    out = restore(str(tmp_path), 1, like)
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["w"], np.float32),
+                               np.arange(16).reshape(4, 4))

@@ -1,0 +1,170 @@
+"""System-level behaviour of the staged query compiler: pass annotations,
+per-query specialized input sets, and a property test driving random
+queries through both engines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings as hsettings, strategies as st
+
+from repro.core import CompiledQuery, VolcanoEngine, optimize, preset
+from repro.core import ir
+from repro.core.expr import (And, Arith, Cmp, CodeIn, CodeRange, Col, Const,
+                             StrIn, col, lit)
+from repro.core.ir import Agg, AggSpec, Join, Scan, Select
+from repro.relational import Database
+from repro.relational.queries import QUERIES, q12
+
+
+@pytest.fixture(scope="module")
+def db():
+    return Database.tpch(sf=0.01, seed=1)
+
+
+def _find(plan, typ):
+    return [n for n in ir.walk(plan) if isinstance(n, typ)]
+
+
+def test_q12_fully_lowered(db):
+    """The paper's running example: after the pipeline, Q12's plan is
+    specialized end-to-end (Fig 8 -> §3 optimizations)."""
+    plan = optimize(q12(), db, preset("opt"))
+    scans = _find(plan, ir.Scan)
+    li = [s for s in scans if s.table == "lineitem"][0]
+    assert li.date_slice is not None             # §3.2.3 date index
+    assert li.date_slice.col == "l_receiptdate"  # most selective bound
+    assert li.columns is not None and "l_comment" not in li.columns  # §3.6.1
+    join = _find(plan, ir.Join)[0]
+    assert join.strategy == "pk_gather"          # §3.2.1 partitioning
+    assert join.build_table == "orders"
+    agg = _find(plan, ir.Agg)[0]
+    assert agg.strategy == "dense"               # §3.2.2 hashmap lowering
+    assert agg.domains == [7]                    # |shipmode dictionary|
+    # §3.4: string predicates lowered to integer code predicates
+    kinds = {type(e).__name__ for n in ir.walk(plan)
+             if isinstance(n, ir.Select)
+             for e in _conjuncts(n.pred)}
+    assert "StrIn" not in kinds
+
+
+def _conjuncts(e):
+    from repro.core.expr import conjuncts
+
+    out = []
+    for c in conjuncts(e):
+        out.append(c)
+    return out
+
+
+def test_naive_preset_leaves_plan_generic(db):
+    plan = optimize(q12(), db, preset("naive"))
+    assert all(j.strategy == "generic" for j in _find(plan, ir.Join))
+    assert all(a.strategy in ("generic", "scalar")
+               for a in _find(plan, ir.Agg))
+    assert all(s.date_slice is None for s in _find(plan, ir.Scan))
+
+
+def test_column_pruning_shrinks_inputs(db):
+    """§3.6.1: the specialized program loads only referenced columns."""
+    full = CompiledQuery(QUERIES["q6"](), db, preset("naive"))
+    pruned = CompiledQuery(QUERIES["q6"](), db, preset("opt"))
+    assert pruned.input_nbytes() < full.input_nbytes()
+    li_cols = [k for k in pruned.inputs if k.startswith("lineitem/col/")]
+    assert len(li_cols) <= 4
+
+
+def test_hoisting_equivalence(db):
+    import dataclasses
+
+    s_on = preset("opt")
+    s_off = dataclasses.replace(preset("opt"), hoist=False)
+    a = CompiledQuery(QUERIES["q3"](), db, s_on).run()
+    b = CompiledQuery(QUERIES["q3"](), db, s_off).run()
+    for k in a:
+        va, vb = a[k], b[k]
+        if va.dtype.kind == "f":
+            np.testing.assert_allclose(va.astype(float), vb.astype(float),
+                                       rtol=1e-3)
+        else:
+            np.testing.assert_array_equal(va, vb)
+
+
+def test_string_dict_lowering_is_ordered(db):
+    """startsWith lowers to a code range because the dictionary is sorted."""
+    from repro.core.passes.string_dict import StringDictionary
+
+    plan = Select(Scan("part"),
+                  __import__("repro.core.expr", fromlist=["StrStartsWith"]
+                             ).StrStartsWith("p_type", "PROMO"))
+    plan = StringDictionary().run(plan, db, preset("opt"))
+    pred = plan.pred
+    assert isinstance(pred, CodeRange)
+    part = db.table("part")
+    vocab = part.vocabs["p_type"]
+    inside = vocab[pred.lo:pred.hi]
+    assert all(v.startswith("PROMO") for v in inside)
+    assert not any(v.startswith("PROMO")
+                   for v in np.concatenate([vocab[:pred.lo], vocab[pred.hi:]]))
+
+
+# ---------------------------------------------------------------------------
+# property test: random single-table aggregation queries
+# ---------------------------------------------------------------------------
+
+NUM_COLS = ["l_quantity", "l_extendedprice", "l_discount", "l_tax"]
+
+
+@hsettings(max_examples=12, deadline=None)
+@given(
+    st.sampled_from(NUM_COLS),
+    st.sampled_from(["<", "<=", ">", ">="]),
+    st.floats(0.0, 1.0),
+    st.sampled_from([None, "l_returnflag", "l_shipmode"]),
+    st.booleans(),
+)
+def test_random_query_equivalence(db, valcol, op, frac, group, with_date):
+    t = db.table("lineitem")
+    lo, hi = t.stats[valcol].min, t.stats[valcol].max
+    thresh = float(lo + frac * (hi - lo))
+    pred = Cmp(op, col(valcol), lit(thresh))
+    if with_date:
+        pred = And(pred, Cmp(">=", col("l_shipdate"), lit(9000)))
+    aggs = [AggSpec("s", "sum", Arith("*", col("l_extendedprice"),
+                                      col("l_quantity"))),
+            AggSpec("c", "count")]
+    plan_fn = lambda: Agg(Select(Scan("lineitem"), pred),
+                          [group] if group else [], list(aggs))
+    want = VolcanoEngine(db).execute(plan_fn())
+    got = CompiledQuery(plan_fn(), db, preset("opt")).run()
+    # canonicalize by group key
+    if group:
+        oa = np.argsort(want[group])
+        ob = np.argsort(got[group])
+        np.testing.assert_array_equal(want[group][oa], got[group][ob])
+        np.testing.assert_allclose(want["s"][oa].astype(float),
+                                   got["s"][ob].astype(float), rtol=2e-3)
+        np.testing.assert_array_equal(want["c"][oa], got["c"][ob])
+    else:
+        np.testing.assert_allclose(want["s"].astype(float),
+                                   got["s"].astype(float), rtol=2e-3)
+        np.testing.assert_array_equal(want["c"], got["c"])
+
+
+def test_batch_compilation_matches_singles(db):
+    """Beyond-paper cross-query compilation: one staged program for many
+    queries returns identical results and shares base-column inputs."""
+    from repro.core.compile import CompiledQueryBatch
+
+    names = ["q1", "q6", "q14"]
+    batch = CompiledQueryBatch([QUERIES[n]() for n in names], db,
+                               preset("opt"))
+    res = batch.run()
+    singles = [CompiledQuery(QUERIES[n](), db, preset("opt")) for n in names]
+    total_single_inputs = sum(len(s.inputs) for s in singles)
+    assert len(batch.inputs) < total_single_inputs   # shared scans dedup'd
+    for r, s in zip(res, singles):
+        want = s.run()
+        for k in want:
+            if want[k].dtype.kind == "f":
+                np.testing.assert_allclose(r[k].astype(float),
+                                           want[k].astype(float), rtol=1e-3)
+            else:
+                np.testing.assert_array_equal(r[k], want[k])
