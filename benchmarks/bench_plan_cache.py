@@ -1,0 +1,72 @@
+"""Plan-cache amortization: cold compile vs cached re-bind latency.
+
+Extends `bench_compile.py` (Fig 22 / Table VII measured one-shot
+compilation cost) to the runtime layer's serving story: for each
+parameterized query, measure
+
+  cold      — first execution through the PlanCache (passes + staging +
+              XLA JIT + run);
+  rebind    — subsequent executions with *different* parameter bindings
+              (cache hit: bind scalars + run the jitted callable);
+  amortization = cold / rebind.
+
+Writes `BENCH_plan_cache.json` next to the repo root (or $REPRO_BENCH_OUT).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import PlanCache, preset
+from repro.core import compile as compile_mod
+from repro.relational.queries import PARAM_ALT_BINDINGS as ALT_BINDINGS
+from repro.relational.queries import PARAM_QUERIES
+
+from benchmarks.common import REPEATS, csv, db
+
+
+def run(out=print) -> dict:
+    database = db()
+    cache = PlanCache(database)
+    settings = preset("opt")
+    results = {}
+    for qname in sorted(PARAM_QUERIES):
+        build, defaults = PARAM_QUERIES[qname]
+        alt = dict(defaults, **ALT_BINDINGS[qname])
+
+        before = compile_mod.STAGINGS
+        t0 = time.perf_counter()
+        cache.execute(build(), settings, defaults)
+        cold = time.perf_counter() - t0
+        assert compile_mod.STAGINGS - before == 1
+
+        rebinds = []
+        for i in range(max(3, REPEATS)):
+            bindings = alt if i % 2 == 0 else defaults
+            t0 = time.perf_counter()
+            cache.execute(build(), settings, bindings)
+            rebinds.append(time.perf_counter() - t0)
+        rebind = min(rebinds)
+        assert compile_mod.STAGINGS - before == 1, "rebind must not re-stage"
+
+        results[qname] = {"cold_s": cold, "rebind_s": rebind,
+                          "amortization": cold / max(rebind, 1e-9)}
+        out(csv(f"plan_cache/{qname}/cold", cold))
+        out(csv(f"plan_cache/{qname}/rebind", rebind))
+        out(f"plan_cache/{qname}/amortization,"
+            f"{results[qname]['amortization']:.1f},x")
+
+    results["cache_stats"] = {
+        "hits": cache.stats.hits, "misses": cache.stats.misses,
+        "compiles": cache.stats.compiles,
+    }
+    path = os.environ.get("REPRO_BENCH_OUT", "BENCH_plan_cache.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    out(f"wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

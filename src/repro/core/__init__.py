@@ -1,13 +1,17 @@
-"""The paper's primary contribution: an SC-style staged query compiler.
+"""The paper's primary contribution: an SC-style staged query compiler,
+organized in three layers (docs/architecture.md):
 
-  expr.py / ir.py     — expression + plan IR
+  expr.py / ir.py     — expression + plan IR (incl. Param query parameters)
   passes/             — the optimization-pass library (paper §3)
-  compile.py          — whole-query staging to one specialized XLA program
+  operators/          — physical operators: stage(node, ctx) -> Frame
+  compile.py          — the staging driver producing one XLA program
+  plan_cache.py       — runtime: compile-once / bind-many plan cache
   volcano.py          — interpreted baseline engine (no compilation)
 """
 from repro.core.compile import CompiledQuery
 from repro.core.passes.pipeline import LADDER, Settings, optimize, preset
+from repro.core.plan_cache import PlanCache
 from repro.core.volcano import VolcanoEngine
 
-__all__ = ["CompiledQuery", "VolcanoEngine", "Settings", "optimize",
-           "preset", "LADDER"]
+__all__ = ["CompiledQuery", "PlanCache", "VolcanoEngine", "Settings",
+           "optimize", "preset", "LADDER"]

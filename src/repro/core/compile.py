@@ -1,20 +1,25 @@
-"""Whole-query staging: lowered plan -> one specialized JAX program.
+"""Whole-query staging driver: lowered plan -> one specialized JAX program.
 
-This is the LegoBase code generator.  Given a pass-pipeline-optimized plan
-(`repro.core.passes`), `CompiledQuery` stages the *entire* query — operators,
-data-structure accesses, string operations, auxiliary functions — into a
-single JAX function whose only inputs are the referenced base columns and
-load-time index structures, then JIT-compiles it with XLA.  All
-query-specific information (date-slice bounds, dictionary codes, key
-domains, strides, pruned column sets) is baked in at staging time, exactly
-as the paper's generated C bakes them into the emitted program.
+This is the LegoBase code generator, reorganized into explicit layers:
 
-Staging runs the plan walker twice:
-  1. a *collection walk*, eagerly on numpy with 8-row samples, which
-     registers the exact input set (per-query specialized loading — the
-     §3.6.1 "unused attributes are never loaded") and exercises all static
-     decisions;
-  2. the *traced walk* inside `jax.jit`, producing the fused XLA program.
+  * the *physical operators* live in `repro.core.operators` — one module
+    per operator, each a pure `stage(node, ctx) -> Frame` function over the
+    shared `StageCtx`;
+  * this module is the driver: it runs the operator dispatch twice — once
+    eagerly on numpy with 8-row samples (the collection walk, which
+    registers the exact input set: per-query specialized loading, §3.6.1)
+    and once under `jax.jit` (the traced walk producing the fused XLA
+    program) — and wraps the result in a `CompiledQuery`;
+  * the *runtime layer* (`repro.core.plan_cache`, `repro.serve`) reuses
+    CompiledQuery across executions.
+
+Query-specific literals (date-slice bounds, dictionary codes, key domains,
+strides, pruned column sets) are baked in at staging time exactly as the
+paper's generated C bakes them in.  `Param` nodes are the exception: a
+numeric parameter becomes a *scalar input* of the staged program
+(`param/<name>`), so `run(params=...)` re-executes the already-jitted XLA
+callable under new bindings without re-staging or re-compiling — the
+compile-once / bind-many amortization of Dashti et al.
 
 With `Settings.fusion = False` an `optimization_barrier` is placed between
 operator regions, reproducing the limited optimization scope of
@@ -22,614 +27,64 @@ template-expansion query compilers (paper Fig 2) for the ladder experiment.
 """
 from __future__ import annotations
 
-import dataclasses
+import threading
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.core import ir
 from repro.core.backend import JaxBackend, NumpyBackend
-from repro.core.expr import Col, EvalEnv, eval_expr
+from repro.core.expr import Param
+from repro.core.operators import StageCtx, frame_nrows
+from repro.core.passes.param_binding import plan_params
 from repro.core.passes.pipeline import Settings, optimize
 from repro.relational.loader import Database
-from repro.relational.schema import ColKind
 
 _SAMPLE = 8
-_I32MAX = np.int32(2**31 - 1)
-_F32BIG = np.float32(3.0e38)
 
+# module-level staging counter: incremented once per CompiledQuery
+# construction.  The runtime layer's cache tests assert on this to prove
+# that re-binding parameters performs no re-staging.  (QueryServer compiles
+# on pool threads, so the increment takes a lock.)
+STAGINGS = 0
+_STAGINGS_LOCK = threading.Lock()
 
-@dataclasses.dataclass
-class Binding:
-    arr: Any
-    kind: str                     # num | codes | chars | words | wordchars
-    table: Optional[object] = None  # source Table (for vocab decode)
-    col: Optional[str] = None
-
-
-@dataclasses.dataclass
-class Frame:
-    cols: dict[str, Binding]
-    mask: Any = None              # bool array or None (all valid)
-    pending: list = dataclasses.field(default_factory=list)
-
-    def copy(self) -> "Frame":
-        return Frame(dict(self.cols), self.mask, list(self.pending))
-
-
-class FrameEnv(EvalEnv):
-    def __init__(self, frame: Frame, backend, cse: bool):
-        super().__init__(backend.xp, cse)
-        self.frame = frame
-
-    def _b(self, name: str) -> Binding:
-        return self.frame.cols[name]
-
-    def get_num(self, name):
-        b = self._b(name)
-        assert b.kind in ("num", "codes"), f"{name} is {b.kind}, not numeric"
-        return b.arr
-
-    def get_codes(self, name):
-        b = self._b(name)
-        assert b.kind == "codes", f"{name} has no dictionary codes ({b.kind})"
-        return b.arr
-
-    def get_chars(self, name):
-        b = self._b(name)
-        assert b.kind == "chars", f"{name} has no char matrix ({b.kind})"
-        return b.arr
-
-    def get_words(self, name):
-        b = self._b(name)
-        assert b.kind == "words", f"{name} has no word codes ({b.kind})"
-        return b.arr
-
-    def get_word_chars(self, name):
-        b = self._b(name)
-        assert b.kind == "wordchars", f"{name} has no text chars ({b.kind})"
-        return b.arr
-
-
-def _ones_mask(xp, n):
-    return xp.ones((n,), dtype=bool)
-
-
-def _and(xp, m1, m2):
-    if m1 is None:
-        return m2
-    if m2 is None:
-        return m1
-    return m1 & m2
-
-
-def _frame_nrows(f: Frame) -> int:
-    b = next(iter(f.cols.values()))
-    return b.arr.shape[0]
-
-
-class Stager:
-    def __init__(self, db: Database, settings: Settings, backend, input_fn):
-        self.db = db
-        self.s = settings
-        self.be = backend
-        self.input = input_fn
-
-    # ------------------------------------------------------------------ scan
-    def _scan(self, scan: ir.Scan) -> Frame:
-        db, be, s = self.db, self.be, self.s
-        t = db.table(scan.table)
-        cols = scan.columns if scan.columns is not None else t.schema.column_names
-        perm = None
-        if scan.date_slice is not None:
-            ds = scan.date_slice
-            _, start, end = db.date_slice(scan.table, ds.col, ds.lo, ds.hi)
-            pfull = self.input(f"{scan.table}/dateperm/{ds.col}",
-                               lambda: db.date_cluster(scan.table, ds.col)[0])
-            perm = pfull[min(start, pfull.shape[0]):min(end, pfull.shape[0])]
-
-        rowmat = None
-        rowcols: list[str] = []
-        if s.layout == "row":
-            rowcols = [c for c in cols
-                       if t.schema.col(c).kind in (ColKind.INT, ColKind.FLOAT,
-                                                   ColKind.DATE)]
-            if rowcols:
-                key = f"{scan.table}/rowmat/" + ",".join(rowcols)
-                rowmat = self.input(
-                    key, lambda: np.stack(
-                        [t.data[c].astype(np.float32) for c in rowcols], axis=1))
-                # The barrier forces the full AoS record to be read before any
-                # column is extracted (paper §3.3: rows can't skip attributes).
-                rowmat = be.barrier(rowmat)
-                if perm is not None:
-                    rowmat = be.barrier(be.take(rowmat, perm))
-
-        bindings: dict[str, Binding] = {}
-        for c in cols:
-            cdef = t.schema.col(c)
-            if cdef.kind in (ColKind.INT, ColKind.FLOAT, ColKind.DATE):
-                if rowmat is not None:
-                    j = rowcols.index(c)
-                    arr = rowmat[:, j]
-                    if cdef.kind != ColKind.FLOAT:
-                        arr = arr.astype(np.int32)
-                else:
-                    arr = self.input(f"{scan.table}/col/{c}", lambda c=c: t.data[c])
-                    if perm is not None:
-                        arr = be.take(arr, perm)
-                bindings[c] = Binding(arr, "num", t, c)
-            elif cdef.kind == ColKind.CAT:
-                if self.s.string_dict:
-                    arr = self.input(f"{scan.table}/col/{c}", lambda c=c: t.data[c])
-                    kind = "codes"
-                else:
-                    arr = self.input(f"{scan.table}/chars/{c}",
-                                     lambda c=c: t.char_matrix(c))
-                    kind = "chars"
-                if perm is not None:
-                    arr = be.take(arr, perm)
-                bindings[c] = Binding(arr, kind, t, c)
-            else:  # TEXT
-                if self.s.string_dict:
-                    arr = self.input(f"{scan.table}/col/{c}", lambda c=c: t.data[c])
-                    kind = "words"
-                else:
-                    arr = self.input(f"{scan.table}/chars/{c}",
-                                     lambda c=c: t.char_matrix(c))
-                    kind = "wordchars"
-                if perm is not None:
-                    arr = be.take(arr, perm)
-                bindings[c] = Binding(arr, kind, t, c)
-        return Frame(bindings)
-
-    # ---------------------------------------------------------------- select
-    def _select(self, sel: ir.Select, defer: bool) -> Frame:
-        f = self.stage(sel.child, defer)
-        if defer:
-            f.pending.append(sel.pred)
-            return f
-        env = FrameEnv(f, self.be, self.s.cse)
-        m = eval_expr(sel.pred, env)
-        f.mask = _and(self.be.xp, f.mask, m)
-        return f
-
-    # --------------------------------------------------------------- project
-    def _project(self, proj: ir.Project, defer: bool) -> Frame:
-        f = self.stage(proj.child, defer)
-        env = FrameEnv(f, self.be, self.s.cse)
-        new = dict(f.cols) if proj.keep_input else {}
-        for name, e in proj.outputs.items():
-            if isinstance(e, Col) and e.name in f.cols:
-                new[name] = f.cols[e.name]
-            else:
-                new[name] = Binding(eval_expr(e, env), "num")
-        out = Frame(new, f.mask, f.pending)
-        return out
-
-    # ------------------------------------------------------------------ join
-    def _join(self, j: ir.Join) -> Frame:
-        be, xp = self.be, self.be.xp
-        stream = self.stage(j.stream)
-        if j.strategy == "pk_gather":
-            build = self.stage(j.build, defer=not self.s.hoist)
-            idx = stream.cols[j.stream_key].arr
-            bmask_g = None
-            if build.mask is not None:
-                bmask_g = be.take(build.mask, idx)
-            cols = dict(stream.cols)
-            for name, b in build.cols.items():
-                if name in cols:
-                    continue
-                g = be.take(b.arr, idx)
-                if j.kind == "left" and bmask_g is not None and g.ndim == 1:
-                    g = xp.where(bmask_g, g, 0)  # missing match -> default 0
-                cols[name] = Binding(g, b.kind, b.table, b.col)
-            mask = stream.mask
-            if j.kind != "left" and bmask_g is not None:
-                mask = _and(xp, mask, bmask_g)
-            out = Frame(cols, mask)
-            if build.pending:
-                env = FrameEnv(out, be, self.s.cse)
-                for pred in build.pending:
-                    out.mask = _and(xp, out.mask, eval_expr(pred, env))
-            return self._barrier(out)
-
-        if j.strategy == "bucket_gather":
-            # composite-PK join via the load-time 2-D partitioned array
-            # (§3.2.1): bucket on key1, discriminate on key2 within the
-            # statically-bounded bucket width.
-            build = self.stage(j.build, defer=not self.s.hoist)
-            w = j.bucket_width
-            mat = self.input(
-                f"{j.build_table}/fkbucket/{j.build_key}",
-                lambda: self.db.fk_bucket(j.build_table, j.build_key)[0])
-            rows = be.take(mat, stream.cols[j.stream_key].arr)   # (n, W)
-            bkey2 = build.cols[j.build_key2].arr
-            skey2 = stream.cols[j.stream_key2].arr
-            bmask = build.mask
-            idx = None
-            hit = None
-            for slot in range(w):
-                r = rows[:, slot]
-                ok = r >= 0
-                cand = be.take(bkey2, xp.clip(r, 0, None))
-                m = ok & (cand == skey2)
-                if bmask is not None:
-                    m = m & be.take(bmask, xp.clip(r, 0, None))
-                idx = xp.where(m, r, 0) if idx is None else xp.where(m, r, idx)
-                hit = m if hit is None else (hit | m)
-            cols = dict(stream.cols)
-            for name, b in build.cols.items():
-                if name in cols:
-                    continue
-                cols[name] = Binding(be.take(b.arr, idx), b.kind, b.table,
-                                     b.col)
-            out = Frame(cols, _and(xp, stream.mask, hit))
-            if build.pending:
-                env = FrameEnv(out, be, self.s.cse)
-                for pred in build.pending:
-                    out.mask = _and(xp, out.mask, eval_expr(pred, env))
-            return self._barrier(out)
-
-        if j.strategy == "exists_flag":
-            build = self.stage(j.build)
-            n_b = _frame_nrows(build)
-            bkey = build.cols[j.build_key].arr
-            bm = build.mask if build.mask is not None else _ones_mask(xp, n_b)
-            flags = be.segment_max(bm.astype(np.int32), bkey, j.domain, 0) > 0
-            hit = be.take(flags, stream.cols[j.stream_key].arr)
-            if j.kind == "anti":
-                hit = ~hit
-            stream.mask = _and(xp, stream.mask, hit)
-            return self._barrier(stream)
-
-        # generic sort-based equi join (build keys unique: PK or group keys)
-        build = self.stage(j.build)
-        n_b = _frame_nrows(build)
-        if j.stream_key2 is not None:
-            # composite key: pack into uint32 (k1·K2 + k2; bound documented)
-            k2b = self._key2_bound(j, stream, build)
-            bkey = (build.cols[j.build_key].arr.astype(np.uint32) * k2b
-                    + build.cols[j.build_key2].arr.astype(np.uint32))
-            skey_stream = (stream.cols[j.stream_key].arr.astype(np.uint32)
-                           * k2b
-                           + stream.cols[j.stream_key2].arr.astype(np.uint32))
-            sentinel = np.uint32(2**32 - 1)
-        else:
-            bkey = build.cols[j.build_key].arr.astype(np.int32)
-            skey_stream = stream.cols[j.stream_key].arr
-            sentinel = _I32MAX
-        bm = build.mask if build.mask is not None else _ones_mask(xp, n_b)
-        keys = xp.where(bm, bkey, sentinel)
-        order = xp.argsort(keys)
-        skeys = be.take(keys, order)
-        pos = be.searchsorted(skeys, skey_stream)
-        pos = xp.clip(pos, 0, max(n_b - 1, 0))
-        hit = be.take(skeys, pos) == skey_stream
-        if j.kind == "semi":
-            stream.mask = _and(xp, stream.mask, hit)
-            return self._barrier(stream)
-        if j.kind == "anti":
-            stream.mask = _and(xp, stream.mask, ~hit)
-            return self._barrier(stream)
-        bidx = be.take(order, pos)
-        cols = dict(stream.cols)
-        for name, b in build.cols.items():
-            if name in cols:
-                continue
-            g = be.take(b.arr, bidx)
-            if j.kind == "left" and g.ndim == 1:
-                g = xp.where(hit, g, 0)
-            cols[name] = Binding(g, b.kind, b.table, b.col)
-        mask = stream.mask if j.kind == "left" else _and(xp, stream.mask, hit)
-        return self._barrier(Frame(cols, mask))
-
-    def _key2_bound(self, j: ir.Join, stream: Frame, build: Frame) -> np.uint32:
-        """Static bound for the second key (from base-table stats)."""
-        for frame in (build, stream):
-            key = j.build_key2 if frame is build else j.stream_key2
-            b = frame.cols[key]
-            if b.table is not None and b.col in b.table.stats:
-                return np.uint32(int(b.table.stats[b.col].max) + 1)
-        return np.uint32(1 << 20)
-
-    # ------------------------------------------------------------------- agg
-    def _agg(self, a: ir.Agg) -> Frame:
-        be, xp = self.be, self.be.xp
-        f = self.stage(a.child)
-        n = _frame_nrows(f)
-        env = FrameEnv(f, be, self.s.cse)
-        mask = f.mask if f.mask is not None else _ones_mask(xp, n)
-        mi32 = mask.astype(np.int32)
-        vals = {}
-        for spec in a.aggs:
-            if spec.expr is not None:
-                vals[spec.name] = eval_expr(spec.expr, env)
-
-        def _finalize(spec, sums, counts, mins, maxs):
-            if spec.fn == "sum":
-                return sums[spec.name]
-            if spec.fn == "count":
-                return counts[spec.name]
-            if spec.fn == "avg":
-                c = counts[spec.name]
-                return sums[spec.name] / xp.maximum(c, 1).astype(np.float32)
-            if spec.fn == "min":
-                return mins[spec.name]
-            if spec.fn == "max":
-                return maxs[spec.name]
-            raise ValueError(spec.fn)
-
-        def _kernel_ok(D):
-            return (self.s.use_pallas and self.be.name == "jax" and D <= 4096
-                    and all(s_.fn in ("sum", "count", "avg") for s_ in a.aggs)
-                    and all(v.ndim == 1 for v in vals.values()))
-
-        if a.strategy == "scalar" or not a.group_by:
-            # (the 'scalar' annotation additionally enables kernel fusion;
-            # functionally an empty group-by is always a single group)
-            if _kernel_ok(1):
-                from repro.kernels import ops as kops
-
-                names = [s_.name for s_ in a.aggs if s_.expr is not None]
-                sums_m, cnt = kops.filter_agg_query(
-                    mask, xp.zeros((n,), dtype=np.int32),
-                    [vals[nm].astype(np.float32) for nm in names], 1)
-                cols = {}
-                for spec in a.aggs:
-                    if spec.fn == "sum":
-                        v = sums_m[0:1, names.index(spec.name)]
-                    elif spec.fn == "count":
-                        v = cnt[0:1].astype(np.int32)
-                    else:  # avg
-                        v = (sums_m[0:1, names.index(spec.name)]
-                             / xp.maximum(cnt[0:1], 1.0))
-                    cols[spec.name] = Binding(v, "num")
-                return self._barrier(Frame(cols, None))
-            cols = {}
-            for spec in a.aggs:
-                if spec.fn == "count":
-                    v = mi32.sum()[None]
-                elif spec.fn == "sum":
-                    v = xp.where(mask, vals[spec.name], 0).sum()[None]
-                elif spec.fn == "avg":
-                    sv = xp.where(mask, vals[spec.name], 0).sum()
-                    cv = mi32.sum()
-                    v = (sv / xp.maximum(cv, 1).astype(np.float32))[None]
-                elif spec.fn == "min":
-                    v = xp.where(mask, vals[spec.name], _F32BIG).min()[None]
-                elif spec.fn == "max":
-                    v = xp.where(mask, vals[spec.name], -_F32BIG).max()[None]
-                cols[spec.name] = Binding(v, "num")
-            return self._barrier(Frame(cols, None))
-
-        if a.strategy == "dense":
-            D = 1
-            for d in a.domains:
-                D *= d
-            # mixed-radix composite index (strides baked at staging time)
-            idx = None
-            strides = []
-            st = 1
-            for d in reversed(a.domains):
-                strides.append(st)
-                st *= d
-            strides = list(reversed(strides))
-            for g, d, stg in zip(a.group_by, a.domains, strides):
-                part = f.cols[g].arr.astype(np.int32) * np.int32(stg)
-                idx = part if idx is None else idx + part
-            idx = xp.clip(idx, 0, D - 1)
-            kernel_sums = kernel_counts = None
-            if _kernel_ok(D):
-                from repro.kernels import ops as kops
-
-                names = [s_.name for s_ in a.aggs if s_.expr is not None]
-                sums_m, cnt = kops.filter_agg_query(
-                    mask, idx, [vals[nm].astype(np.float32) for nm in names], D)
-                kernel_sums = {nm: sums_m[:, i] for i, nm in enumerate(names)}
-                kernel_counts = cnt
-                present = (cnt > 0).astype(np.int32)
-            else:
-                present = be.segment_max(mi32, idx, D, 0)
-            cols: dict[str, Binding] = {}
-            ar = xp.arange(D, dtype=np.int32)
-            for g, d, stg in zip(a.group_by, a.domains, strides):
-                b = f.cols[g]
-                keyvals = (ar // np.int32(stg)) % np.int32(d)
-                cols[g] = Binding(keyvals, b.kind, b.table, b.col)
-            for c in a.carry:
-                b = f.cols[c]
-                if b.arr.ndim == 2:
-                    data = xp.where(mask[:, None], b.arr, 0)
-                    cols[c] = Binding(be.segment_max(data, idx, D, 0),
-                                      b.kind, b.table, b.col)
-                else:
-                    if b.arr.dtype.kind == "f":
-                        data = xp.where(mask, b.arr, -_F32BIG)
-                        fill = np.float32(0)
-                    else:
-                        data = xp.where(mask, b.arr, np.int32(-1)
-                                        ).astype(b.arr.dtype)
-                        fill = np.array(0, b.arr.dtype)
-                    cols[c] = Binding(be.segment_max(data, idx, D, fill),
-                                      b.kind, b.table, b.col)
-            sums, counts, mins, maxs = {}, {}, {}, {}
-            for spec in a.aggs:
-                if spec.fn in ("sum", "avg"):
-                    sums[spec.name] = (kernel_sums[spec.name]
-                                       if kernel_sums is not None else
-                                       be.segment_sum(
-                                           xp.where(mask, vals[spec.name], 0),
-                                           idx, D))
-                if spec.fn in ("count", "avg"):
-                    counts[spec.name] = (kernel_counts.astype(np.int32)
-                                         if kernel_counts is not None else
-                                         be.segment_sum(mi32, idx, D))
-                if spec.fn == "min":
-                    mins[spec.name] = be.segment_min(
-                        xp.where(mask, vals[spec.name], _F32BIG), idx, D, _F32BIG)
-                if spec.fn == "max":
-                    maxs[spec.name] = be.segment_max(
-                        xp.where(mask, vals[spec.name], -_F32BIG), idx, D,
-                        -_F32BIG)
-            for spec in a.aggs:
-                cols[spec.name] = Binding(
-                    _finalize(spec, sums, counts, mins, maxs), "num")
-            return self._barrier(Frame(cols, present > 0))
-
-        # ---- generic sort-based grouping (the un-specialized hash map) ----
-        sort_keys: list = []   # major..minor
-        for g in a.group_by:
-            b = f.cols[g]
-            if b.arr.ndim == 2:
-                sort_keys.extend([b.arr[:, k] for k in range(b.arr.shape[1])])
-            else:
-                sort_keys.append(b.arr)
-        invalid = ~mask
-        order = be.lexsort(list(reversed(sort_keys)) + [invalid])
-        smask = be.take(mask, order)
-        skeys = [be.take(k, order) for k in sort_keys]
-        diff = None
-        for k in skeys:
-            d = xp.concatenate([xp.ones((1,), dtype=bool), k[1:] != k[:-1]])
-            diff = d if diff is None else (diff | d)
-        new_group = diff & smask
-        flag2 = new_group | ~smask
-        gid = xp.cumsum(flag2.astype(np.int32)) - 1
-        n_groups = new_group.astype(np.int32).sum()
-        ar = xp.arange(n, dtype=np.int32)
-        starts = be.segment_min(ar, gid, n, np.int32(0))
-        cols = {}
-        for g in a.group_by + list(a.carry):
-            b = f.cols[g]
-            sorted_arr = be.take(b.arr, order)
-            cols[g] = Binding(be.take(sorted_arr, starts), b.kind, b.table, b.col)
-        sums, counts, mins, maxs = {}, {}, {}, {}
-        smi32 = smask.astype(np.int32)
-        for spec in a.aggs:
-            sv = be.take(vals[spec.name], order) if spec.expr is not None else None
-            if spec.fn in ("sum", "avg"):
-                sums[spec.name] = be.segment_sum(xp.where(smask, sv, 0), gid, n)
-            if spec.fn in ("count", "avg"):
-                counts[spec.name] = be.segment_sum(smi32, gid, n)
-            if spec.fn == "min":
-                mins[spec.name] = be.segment_min(
-                    xp.where(smask, sv, _F32BIG), gid, n, _F32BIG)
-            if spec.fn == "max":
-                maxs[spec.name] = be.segment_max(
-                    xp.where(smask, sv, -_F32BIG), gid, n, -_F32BIG)
-        for spec in a.aggs:
-            cols[spec.name] = Binding(
-                _finalize(spec, sums, counts, mins, maxs), "num")
-        return self._barrier(Frame(cols, ar < n_groups))
-
-    # ------------------------------------------------------------------ sort
-    def _sort(self, srt: ir.Sort) -> Frame:
-        f = self.stage(srt.child)
-        return self._sort_frame(f, srt.keys)
-
-    def _sort_frame(self, f: Frame, sort_keys) -> Frame:
-        be, xp = self.be, self.be.xp
-        n = _frame_nrows(f)
-        mask = f.mask if f.mask is not None else _ones_mask(xp, n)
-        keys = []  # major..minor
-        for name, asc in sort_keys:
-            b = f.cols[name]
-            if b.arr.ndim == 2:
-                for k in range(b.arr.shape[1]):
-                    kk = b.arr[:, k]
-                    keys.append(kk if asc else (np.uint8(255) - kk))
-            else:
-                arr = b.arr
-                keys.append(arr if asc else -arr)
-        order = be.lexsort(list(reversed(keys)) + [~mask])
-        cols = {name: Binding(be.take(b.arr, order), b.kind, b.table, b.col)
-                for name, b in f.cols.items()}
-        return Frame(cols, be.take(mask, order))
-
-    # ----------------------------------------------------------------- limit
-    def _limit(self, lim: ir.Limit) -> Frame:
-        # Beyond-paper: ORDER BY <numeric> LIMIT k lowers to top-k selection
-        # on the primary sort key + an exact k-row sort (the global sort over
-        # the padded aggregation domain is wasted work when only k rows
-        # survive) — the masked_topk Pallas kernel is the TPU form of this.
-        if (self.s.topk_limit and isinstance(lim.child, ir.Sort)
-                and lim.child.keys):
-            srt = lim.child
-            f = self.stage(srt.child)
-            name0, asc0 = srt.keys[0]
-            b0 = f.cols[name0]
-            if b0.arr.ndim == 1:
-                xp, be = self.be.xp, self.be
-                n_rows = _frame_nrows(f)
-                k = min(lim.n, n_rows)
-                key = b0.arr.astype(np.float32)
-                key = key if not asc0 else -key
-                if f.mask is not None:
-                    key = xp.where(f.mask, key, -_F32BIG)
-                if self.be.name == "jax":
-                    import jax
-
-                    _, idx = jax.lax.top_k(key, k)
-                else:
-                    idx = np.argsort(-key, kind="stable")[:k]
-                cols = {nm: Binding(be.take(b.arr, idx), b.kind, b.table,
-                                    b.col) for nm, b in f.cols.items()}
-                mask = None if f.mask is None else be.take(f.mask, idx)
-                sub = Frame(cols, mask)
-                return self._sort_frame(sub, srt.keys)
-        f = self.stage(lim.child)
-        n = min(lim.n, _frame_nrows(f))
-        cols = {name: Binding(b.arr[:n], b.kind, b.table, b.col)
-                for name, b in f.cols.items()}
-        mask = None if f.mask is None else f.mask[:n]
-        return Frame(cols, mask)
-
-    # ------------------------------------------------------------------ misc
-    def _barrier(self, f: Frame) -> Frame:
-        """fusion=False: cut the XLA fusion scope at operator boundaries."""
-        if self.s.fusion or self.be.name == "numpy":
-            return f
-        arrs = {n: b.arr for n, b in f.cols.items()}
-        wrapped = self.be.barrier(arrs)
-        cols = {n: Binding(wrapped[n], b.kind, b.table, b.col)
-                for n, b in f.cols.items()}
-        mask = None if f.mask is None else self.be.barrier(f.mask)
-        return Frame(cols, mask, f.pending)
-
-    def stage(self, p: ir.Plan, defer: bool = False) -> Frame:
-        if isinstance(p, ir.Scan):
-            return self._scan(p)
-        if isinstance(p, ir.Select):
-            return self._select(p, defer)
-        if isinstance(p, ir.Project):
-            return self._project(p, defer)
-        if isinstance(p, ir.Join):
-            return self._join(p)
-        if isinstance(p, ir.Agg):
-            return self._agg(p)
-        if isinstance(p, ir.Sort):
-            return self._sort(p)
-        if isinstance(p, ir.Limit):
-            return self._limit(p)
-        raise TypeError(type(p))
-
-
-# ---------------------------------------------------------------------------
-# CompiledQuery: passes -> collection walk -> jit -> run
-# ---------------------------------------------------------------------------
 
 class CompiledQuery:
-    def __init__(self, plan: ir.Plan, db: Database, settings: Settings):
+    """A staged, jitted query.  `params` supplies bindings for every
+    runtime (numeric) Param left residual in the optimized plan; they are
+    also the values used during the collection walk.  Compile-time params
+    (string values, Limit.n) must have been substituted before
+    construction — pass `bindings` to `optimize`, or go through
+    `PlanCache`."""
+
+    def __init__(self, plan: ir.Plan, db: Database, settings: Settings,
+                 params: Optional[dict] = None):
         import jax
+
+        global STAGINGS
+        with _STAGINGS_LOCK:
+            STAGINGS += 1
 
         self.db = db
         self.settings = settings
         t0 = time.perf_counter()
         self.plan = optimize(plan, db, settings)
         self.pass_time = time.perf_counter() - t0
+
+        spec = plan_params(self.plan)
+        structural = sorted(n for n, i in spec.items() if i.structural)
+        if structural:
+            raise TypeError(
+                f"compile-time parameters {structural} are unresolved; "
+                "bind them via optimize(..., bindings=...) or PlanCache")
+        self.param_spec: dict[str, str] = {n: i.dtype for n, i in spec.items()}
+        self.param_defaults = {n: (params or {})[n] for n in self.param_spec
+                               if n in (params or {})}
+        missing = sorted(set(self.param_spec) - set(self.param_defaults))
+        if missing:
+            raise KeyError(f"no binding supplied for parameters {missing}")
 
         # 1. collection walk (numpy, 8-row samples): registers inputs and
         #    output schema; every static decision is exercised here.
@@ -640,23 +95,31 @@ class CompiledQuery:
             if key not in self.inputs:
                 self.inputs[key] = np.asarray(make())
             v = self.inputs[key]
-            return v[:_SAMPLE]
+            return v if v.ndim == 0 else v[:_SAMPLE]   # params are scalars
 
-        nb = NumpyBackend()
-        sampler = Stager(db, settings, nb, collect_input)
+        sampler = StageCtx(db, settings, NumpyBackend(), collect_input,
+                           self.param_defaults)
         sample_frame = sampler.stage(self.plan)
         self.out_meta = [(name, b.kind, b.table, b.col)
                          for name, b in sample_frame.cols.items()]
+        # a dead-but-declared param would desync the jit input tree:
+        # register every declared param unconditionally.
+        for name, dtype in self.param_spec.items():
+            sampler.param(Param(name, dtype))
 
         # 2. the staged program.
+        self.n_traces = 0
+
         def fn(inputs):
-            jb = JaxBackend()
-            st = Stager(db, settings, jb, lambda key, make: inputs[key])
-            frame = st.stage(self.plan)
+            self.n_traces += 1   # host side effect: runs only while tracing
+            ctx = StageCtx(db, settings, JaxBackend(),
+                           lambda key, make: inputs[key],
+                           self.param_defaults)
+            frame = ctx.stage(self.plan)
             out = {name: b.arr for name, b in frame.cols.items()}
-            n = _frame_nrows(frame)
+            n = frame_nrows(frame)
             mask = frame.mask if frame.mask is not None \
-                else jb.xp.ones((n,), dtype=bool)
+                else ctx.xp.ones((n,), dtype=bool)
             return out, mask
 
         self.fn = fn
@@ -678,10 +141,35 @@ class CompiledQuery:
         self.compiled = compiled
         return compiled
 
-    def run(self) -> dict[str, np.ndarray]:
+    # -- parameter re-binding --------------------------------------------------
+    def bind(self, params: Optional[dict] = None) -> dict[str, np.ndarray]:
+        """Input dict for one execution: base columns + index structures
+        (shared across bindings) and the per-execution parameter scalars.
+
+        `params=None` executes under the construction-time bindings; a
+        non-None dict must name *every* runtime parameter — a partial dict
+        would silently mix bindings from two requests."""
+        if params is not None:
+            unknown = sorted(set(params) - set(self.param_spec))
+            if unknown:
+                raise KeyError(f"unknown parameters {unknown}; this plan "
+                               f"takes {sorted(self.param_spec)}")
+            missing = sorted(set(self.param_spec) - set(params))
+            if missing:
+                raise KeyError(f"no binding supplied for parameters "
+                               f"{missing}")
+        if not self.param_spec:
+            return self.inputs
+        merged = params if params is not None else self.param_defaults
+        inputs = dict(self.inputs)
+        for name, dtype in self.param_spec.items():
+            inputs[f"param/{name}"] = np.asarray(merged[name], dtype=dtype)
+        return inputs
+
+    def run(self, params: Optional[dict] = None) -> dict[str, np.ndarray]:
         import jax
 
-        out, mask = self._jitted(self.inputs)
+        out, mask = self._jitted(self.bind(params))
         out = jax.tree.map(np.asarray, out)
         mask = np.asarray(mask)
         return self._decode(out, mask)

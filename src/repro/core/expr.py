@@ -23,7 +23,7 @@ import dataclasses
 from typing import Any, Union
 
 Expr = Union[
-    "Col", "Const", "Arith", "Cmp", "And", "Or", "Not",
+    "Col", "Const", "Param", "Arith", "Cmp", "And", "Or", "Not",
     "StrEq", "StrIn", "StrStartsWith", "StrContainsWord",
     "CodeEq", "CodeIn", "CodeRange", "WordCode",
 ]
@@ -37,6 +37,22 @@ class Col:
 @dataclasses.dataclass(frozen=True)
 class Const:
     value: Any  # int | float | bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A named query parameter (compile-once / bind-many execution).
+
+    Numeric params (`dtype` in int32/int64/float32/float64/bool) are *runtime*
+    parameters: the staged program receives them as scalar inputs, so a new
+    binding re-executes the already-jitted XLA callable without re-staging.
+    `dtype == "str"` params (and any Param used as `Limit.n`) are *compile
+    time*: they must be substituted into the plan before optimization (the
+    string-dictionary / top-k rewrites need the concrete value) and therefore
+    participate in the plan-cache key.
+    """
+    name: str
+    dtype: str = "float32"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,26 +105,26 @@ class Year:
 @dataclasses.dataclass(frozen=True)
 class StrEq:
     col: str
-    value: str
+    value: "str | Param"   # Param here is compile-time (substituted pre-opt)
     negate: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
 class StrIn:
     col: str
-    values: tuple[str, ...]
+    values: "tuple[str | Param, ...]"
 
 
 @dataclasses.dataclass(frozen=True)
 class StrStartsWith:
     col: str
-    prefix: str
+    prefix: "str | Param"
 
 
 @dataclasses.dataclass(frozen=True)
 class StrContainsWord:
     col: str
-    word: str
+    word: "str | Param"
     negate: bool = False
 
 
@@ -178,11 +194,25 @@ class EvalEnv:
     `encode(name, s)`, `encode_word(name, s)`, `code_range(name, prefix)`
     """
 
-    def __init__(self, xp, cse: bool = True):
+    def __init__(self, xp, cse: bool = True, params: dict | None = None):
         self.xp = xp
         self.cache: dict | None = {} if cse else None
+        self.params: dict = params or {}
 
-    # subclasses implement the accessors above.
+    # subclasses implement the column accessors above.
+
+    def get_param(self, p: "Param"):
+        """Resolve a runtime parameter to a scalar (override to thread
+        params through a staged program as traced inputs)."""
+        if p.name not in self.params:
+            raise KeyError(f"unbound query parameter {p.name!r}")
+        import numpy as np
+
+        v = self.params[p.name]
+        if p.dtype == "str":
+            raise TypeError(
+                f"string parameter {p.name!r} must be bound at compile time")
+        return np.asarray(v, dtype=p.dtype)
 
 
 def eval_expr(e: Expr, env: EvalEnv):
@@ -197,6 +227,9 @@ def eval_expr(e: Expr, env: EvalEnv):
 def _bytes_const(s: str, width: int, xp):
     import numpy as np
 
+    if isinstance(s, Param):
+        raise TypeError(f"string parameter {s.name!r} must be bound "
+                        "(substitute_params) before execution")
     b = np.zeros(width, dtype=np.uint8)
     raw = s.encode()[:width]
     b[: len(raw)] = np.frombuffer(raw, dtype=np.uint8)
@@ -209,6 +242,8 @@ def _eval(e: Expr, env: EvalEnv):
         return env.get_num(e.name)
     if isinstance(e, Const):
         return e.value
+    if isinstance(e, Param):
+        return env.get_param(e)
     if isinstance(e, Arith):
         return _ARITH[e.op](eval_expr(e.lhs, env), eval_expr(e.rhs, env))
     if isinstance(e, Cmp):
@@ -349,6 +384,38 @@ def fold_constants(e: Expr) -> Expr:
         return Where(c, t, o)
     if isinstance(e, Year):
         return Year(fold_constants(e.operand))
+    return e
+
+
+def substitute_params(e: Expr, bindings: dict) -> Expr:
+    """Replace Params named in `bindings` with Consts / literal strings.
+    Params absent from `bindings` are left in place (param-residual)."""
+
+    def val(p):
+        return bindings[p.name] if isinstance(p, Param) and p.name in bindings \
+            else p
+
+    sub = lambda x: substitute_params(x, bindings)
+    if isinstance(e, Param):
+        return Const(bindings[e.name]) if e.name in bindings else e
+    if isinstance(e, (Arith, Cmp)):
+        return type(e)(e.op, sub(e.lhs), sub(e.rhs))
+    if isinstance(e, (And, Or)):
+        return type(e)(sub(e.lhs), sub(e.rhs))
+    if isinstance(e, Not):
+        return Not(sub(e.operand))
+    if isinstance(e, Year):
+        return Year(sub(e.operand))
+    if isinstance(e, Where):
+        return Where(sub(e.cond), sub(e.then), sub(e.other))
+    if isinstance(e, StrEq):
+        return StrEq(e.col, val(e.value), e.negate)
+    if isinstance(e, StrIn):
+        return StrIn(e.col, tuple(val(v) for v in e.values))
+    if isinstance(e, StrStartsWith):
+        return StrStartsWith(e.col, val(e.prefix))
+    if isinstance(e, StrContainsWord):
+        return StrContainsWord(e.col, val(e.word), e.negate)
     return e
 
 

@@ -100,7 +100,9 @@ class Sort:
 @dataclasses.dataclass
 class Limit:
     child: "Plan"
-    n: int
+    # a Param here is a *compile-time* parameter: the top-k rewrite needs a
+    # static k, so it must be resolved (passes.param_binding) before staging.
+    n: "int | object"
 
 
 Plan = Scan | Select | Project | Join | Agg | Sort | Limit

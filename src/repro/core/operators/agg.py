@@ -1,0 +1,206 @@
+"""Aggregation: the three §3.2.2 strategies.
+
+  scalar  — no group key: accumulators are scalar registers (optionally the
+            fused filter+agg Pallas kernel);
+  dense   — statically-known key domains: the hash map is a pre-allocated
+            array indexed by a mixed-radix composite of the key codes;
+  generic — sort-based grouping (the un-specialized hash map).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ir
+from repro.core.expr import eval_expr
+from repro.core.operators.base import (Binding, F32BIG, Frame, StageCtx,
+                                       and_masks, frame_nrows, ones_mask)
+
+
+def stage(a: ir.Agg, ctx: StageCtx, defer: bool = False) -> Frame:
+    be, xp = ctx.backend, ctx.xp
+    f = ctx.stage(a.child)
+    n = frame_nrows(f)
+    env = ctx.env(f)
+    mask = f.mask if f.mask is not None else ones_mask(xp, n)
+    mi32 = mask.astype(np.int32)
+    vals = {}
+    for spec in a.aggs:
+        if spec.expr is not None:
+            vals[spec.name] = eval_expr(spec.expr, env)
+
+    def _finalize(spec, sums, counts, mins, maxs):
+        if spec.fn == "sum":
+            return sums[spec.name]
+        if spec.fn == "count":
+            return counts[spec.name]
+        if spec.fn == "avg":
+            c = counts[spec.name]
+            return sums[spec.name] / xp.maximum(c, 1).astype(np.float32)
+        if spec.fn == "min":
+            return mins[spec.name]
+        if spec.fn == "max":
+            return maxs[spec.name]
+        raise ValueError(spec.fn)
+
+    def _kernel_ok(D):
+        return (ctx.settings.use_pallas and be.name == "jax" and D <= 4096
+                and all(s_.fn in ("sum", "count", "avg") for s_ in a.aggs)
+                and all(v.ndim == 1 for v in vals.values()))
+
+    if a.strategy == "scalar" or not a.group_by:
+        # (the 'scalar' annotation additionally enables kernel fusion;
+        # functionally an empty group-by is always a single group)
+        if _kernel_ok(1):
+            from repro.kernels import ops as kops
+
+            names = [s_.name for s_ in a.aggs if s_.expr is not None]
+            sums_m, cnt = kops.filter_agg_query(
+                mask, xp.zeros((n,), dtype=np.int32),
+                [vals[nm].astype(np.float32) for nm in names], 1)
+            cols = {}
+            for spec in a.aggs:
+                if spec.fn == "sum":
+                    v = sums_m[0:1, names.index(spec.name)]
+                elif spec.fn == "count":
+                    v = cnt[0:1].astype(np.int32)
+                else:  # avg
+                    v = (sums_m[0:1, names.index(spec.name)]
+                         / xp.maximum(cnt[0:1], 1.0))
+                cols[spec.name] = Binding(v, "num")
+            return ctx.barrier(Frame(cols, None))
+        cols = {}
+        for spec in a.aggs:
+            if spec.fn == "count":
+                v = mi32.sum()[None]
+            elif spec.fn == "sum":
+                v = xp.where(mask, vals[spec.name], 0).sum()[None]
+            elif spec.fn == "avg":
+                sv = xp.where(mask, vals[spec.name], 0).sum()
+                cv = mi32.sum()
+                v = (sv / xp.maximum(cv, 1).astype(np.float32))[None]
+            elif spec.fn == "min":
+                v = xp.where(mask, vals[spec.name], F32BIG).min()[None]
+            elif spec.fn == "max":
+                v = xp.where(mask, vals[spec.name], -F32BIG).max()[None]
+            cols[spec.name] = Binding(v, "num")
+        return ctx.barrier(Frame(cols, None))
+
+    if a.strategy == "dense":
+        D = 1
+        for d in a.domains:
+            D *= d
+        # mixed-radix composite index (strides baked at staging time)
+        idx = None
+        strides = []
+        st = 1
+        for d in reversed(a.domains):
+            strides.append(st)
+            st *= d
+        strides = list(reversed(strides))
+        for g, d, stg in zip(a.group_by, a.domains, strides):
+            part = f.cols[g].arr.astype(np.int32) * np.int32(stg)
+            idx = part if idx is None else idx + part
+        idx = xp.clip(idx, 0, D - 1)
+        kernel_sums = kernel_counts = None
+        if _kernel_ok(D):
+            from repro.kernels import ops as kops
+
+            names = [s_.name for s_ in a.aggs if s_.expr is not None]
+            sums_m, cnt = kops.filter_agg_query(
+                mask, idx, [vals[nm].astype(np.float32) for nm in names], D)
+            kernel_sums = {nm: sums_m[:, i] for i, nm in enumerate(names)}
+            kernel_counts = cnt
+            present = (cnt > 0).astype(np.int32)
+        else:
+            present = be.segment_max(mi32, idx, D, 0)
+        cols: dict[str, Binding] = {}
+        ar = xp.arange(D, dtype=np.int32)
+        for g, d, stg in zip(a.group_by, a.domains, strides):
+            b = f.cols[g]
+            keyvals = (ar // np.int32(stg)) % np.int32(d)
+            cols[g] = Binding(keyvals, b.kind, b.table, b.col)
+        for c in a.carry:
+            b = f.cols[c]
+            if b.arr.ndim == 2:
+                data = xp.where(mask[:, None], b.arr, 0)
+                cols[c] = Binding(be.segment_max(data, idx, D, 0),
+                                  b.kind, b.table, b.col)
+            else:
+                if b.arr.dtype.kind == "f":
+                    data = xp.where(mask, b.arr, -F32BIG)
+                    fill = np.float32(0)
+                else:
+                    data = xp.where(mask, b.arr, np.int32(-1)
+                                    ).astype(b.arr.dtype)
+                    fill = np.array(0, b.arr.dtype)
+                cols[c] = Binding(be.segment_max(data, idx, D, fill),
+                                  b.kind, b.table, b.col)
+        sums, counts, mins, maxs = {}, {}, {}, {}
+        for spec in a.aggs:
+            if spec.fn in ("sum", "avg"):
+                sums[spec.name] = (kernel_sums[spec.name]
+                                   if kernel_sums is not None else
+                                   be.segment_sum(
+                                       xp.where(mask, vals[spec.name], 0),
+                                       idx, D))
+            if spec.fn in ("count", "avg"):
+                counts[spec.name] = (kernel_counts.astype(np.int32)
+                                     if kernel_counts is not None else
+                                     be.segment_sum(mi32, idx, D))
+            if spec.fn == "min":
+                mins[spec.name] = be.segment_min(
+                    xp.where(mask, vals[spec.name], F32BIG), idx, D, F32BIG)
+            if spec.fn == "max":
+                maxs[spec.name] = be.segment_max(
+                    xp.where(mask, vals[spec.name], -F32BIG), idx, D,
+                    -F32BIG)
+        for spec in a.aggs:
+            cols[spec.name] = Binding(
+                _finalize(spec, sums, counts, mins, maxs), "num")
+        return ctx.barrier(Frame(cols, present > 0))
+
+    # ---- generic sort-based grouping (the un-specialized hash map) ----
+    sort_keys: list = []   # major..minor
+    for g in a.group_by:
+        b = f.cols[g]
+        if b.arr.ndim == 2:
+            sort_keys.extend([b.arr[:, k] for k in range(b.arr.shape[1])])
+        else:
+            sort_keys.append(b.arr)
+    invalid = ~mask
+    order = be.lexsort(list(reversed(sort_keys)) + [invalid])
+    smask = be.take(mask, order)
+    skeys = [be.take(k, order) for k in sort_keys]
+    diff = None
+    for k in skeys:
+        d = xp.concatenate([xp.ones((1,), dtype=bool), k[1:] != k[:-1]])
+        diff = d if diff is None else (diff | d)
+    new_group = diff & smask
+    flag2 = new_group | ~smask
+    gid = xp.cumsum(flag2.astype(np.int32)) - 1
+    n_groups = new_group.astype(np.int32).sum()
+    ar = xp.arange(n, dtype=np.int32)
+    starts = be.segment_min(ar, gid, n, np.int32(0))
+    cols = {}
+    for g in a.group_by + list(a.carry):
+        b = f.cols[g]
+        sorted_arr = be.take(b.arr, order)
+        cols[g] = Binding(be.take(sorted_arr, starts), b.kind, b.table, b.col)
+    sums, counts, mins, maxs = {}, {}, {}, {}
+    smi32 = smask.astype(np.int32)
+    for spec in a.aggs:
+        sv = be.take(vals[spec.name], order) if spec.expr is not None else None
+        if spec.fn in ("sum", "avg"):
+            sums[spec.name] = be.segment_sum(xp.where(smask, sv, 0), gid, n)
+        if spec.fn in ("count", "avg"):
+            counts[spec.name] = be.segment_sum(smi32, gid, n)
+        if spec.fn == "min":
+            mins[spec.name] = be.segment_min(
+                xp.where(smask, sv, F32BIG), gid, n, F32BIG)
+        if spec.fn == "max":
+            maxs[spec.name] = be.segment_max(
+                xp.where(smask, sv, -F32BIG), gid, n, -F32BIG)
+    for spec in a.aggs:
+        cols[spec.name] = Binding(
+            _finalize(spec, sums, counts, mins, maxs), "num")
+    return ctx.barrier(Frame(cols, ar < n_groups))

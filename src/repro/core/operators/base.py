@@ -1,0 +1,152 @@
+"""Shared staging context + frame types for the physical-operator layer.
+
+Each operator module in `repro.core.operators` exposes
+
+    stage(node, ctx, defer=False) -> Frame
+
+and is a pure function of the plan node and the `StageCtx` — no operator
+knows about any other (the GenDB-style modularity argument: operators are
+independently testable units).  The same code runs twice per compilation:
+eagerly on numpy 8-row samples (the collection walk, registering the staged
+program's exact input set) and under `jax.jit` tracing (the staged walk
+producing the fused XLA program).  `StageCtx.backend` is the only
+difference between the two.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.expr import EvalEnv, Param
+
+I32MAX = np.int32(2**31 - 1)
+F32BIG = np.float32(3.0e38)
+
+
+@dataclasses.dataclass
+class Binding:
+    arr: Any
+    kind: str                     # num | codes | chars | words | wordchars
+    table: Optional[object] = None  # source Table (for vocab decode)
+    col: Optional[str] = None
+
+
+@dataclasses.dataclass
+class Frame:
+    cols: dict[str, Binding]
+    mask: Any = None              # bool array or None (all valid)
+    pending: list = dataclasses.field(default_factory=list)
+
+    def copy(self) -> "Frame":
+        return Frame(dict(self.cols), self.mask, list(self.pending))
+
+
+def frame_nrows(f: Frame) -> int:
+    b = next(iter(f.cols.values()))
+    return b.arr.shape[0]
+
+
+def ones_mask(xp, n):
+    return xp.ones((n,), dtype=bool)
+
+
+def and_masks(xp, m1, m2):
+    if m1 is None:
+        return m2
+    if m2 is None:
+        return m1
+    return m1 & m2
+
+
+@dataclasses.dataclass
+class StageCtx:
+    """Everything an operator needs to stage itself.
+
+    `input(key, make)` registers/fetches a named input of the staged
+    program: during the collection walk it materializes `make()` and
+    records it; during the traced walk it returns the corresponding traced
+    array.  `params` holds the current runtime parameter bindings (used as
+    concrete values in the collection walk and registered as scalar inputs
+    `param/<name>` so re-binding never re-stages).
+    """
+    db: Any
+    settings: Any
+    backend: Any
+    input: Callable[[str, Callable], Any]
+    params: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def xp(self):
+        return self.backend.xp
+
+    def stage(self, plan, defer: bool = False) -> Frame:
+        from repro.core import operators
+
+        return operators.stage(plan, self, defer)
+
+    def env(self, frame: Frame) -> "FrameEnv":
+        return FrameEnv(frame, self)
+
+    def param(self, p: Param):
+        if p.dtype == "str":
+            raise TypeError(f"string parameter {p.name!r} must be bound at "
+                            "compile time (it has no runtime representation)")
+        if p.name not in self.params:
+            raise KeyError(f"unbound query parameter {p.name!r}")
+        return self.input(
+            f"param/{p.name}",
+            lambda: np.asarray(self.params[p.name], dtype=p.dtype))
+
+    def barrier(self, f: Frame) -> Frame:
+        """fusion=False: cut the XLA fusion scope at operator boundaries."""
+        if self.settings.fusion or self.backend.name == "numpy":
+            return f
+        arrs = {n: b.arr for n, b in f.cols.items()}
+        wrapped = self.backend.barrier(arrs)
+        cols = {n: Binding(wrapped[n], b.kind, b.table, b.col)
+                for n, b in f.cols.items()}
+        mask = None if f.mask is None else self.backend.barrier(f.mask)
+        return Frame(cols, mask, f.pending)
+
+
+class FrameEnv(EvalEnv):
+    """Expression environment over a staged Frame."""
+
+    def __init__(self, frame: Frame, ctx: StageCtx):
+        super().__init__(ctx.backend.xp, ctx.settings.cse)
+        self.frame = frame
+        self.ctx = ctx
+
+    def _b(self, name: str) -> Binding:
+        return self.frame.cols[name]
+
+    def get_num(self, name):
+        b = self._b(name)
+        assert b.kind in ("num", "codes"), f"{name} is {b.kind}, not numeric"
+        return b.arr
+
+    def get_codes(self, name):
+        b = self._b(name)
+        assert b.kind == "codes", f"{name} has no dictionary codes ({b.kind})"
+        return b.arr
+
+    def get_chars(self, name):
+        b = self._b(name)
+        assert b.kind == "chars", f"{name} has no char matrix ({b.kind})"
+        return b.arr
+
+    def get_words(self, name):
+        b = self._b(name)
+        assert b.kind == "words", f"{name} has no word codes ({b.kind})"
+        return b.arr
+
+    def get_word_chars(self, name):
+        b = self._b(name)
+        assert b.kind == "wordchars", f"{name} has no text chars ({b.kind})"
+        return b.arr
+
+    def get_param(self, p: Param):
+        # runtime params are inputs of the staged program, not env literals
+        return self.ctx.param(p)

@@ -1,0 +1,147 @@
+"""Join: the four lowered strategies of §3.2.1.
+
+  pk_gather     — PK/FK equi-join as a vectorized gather (the 1-D
+                  partitioned array is the parent table itself);
+  bucket_gather — composite-PK join probing the load-time 2-D partitioned
+                  array (bucket on key1, discriminate on key2);
+  exists_flag   — semi/anti membership via a dense boolean over the key
+                  domain;
+  generic       — sort + binary-search equi-join (unique build keys).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ir
+from repro.core.expr import eval_expr
+from repro.core.operators.base import (Binding, Frame, I32MAX, StageCtx,
+                                       and_masks, frame_nrows, ones_mask)
+
+
+def _apply_pending(out: Frame, build: Frame, ctx: StageCtx) -> None:
+    if build.pending:
+        env = ctx.env(out)
+        for pred in build.pending:
+            out.mask = and_masks(ctx.xp, out.mask, eval_expr(pred, env))
+
+
+def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
+    be, xp = ctx.backend, ctx.xp
+    stream = ctx.stage(j.stream)
+
+    if j.strategy == "pk_gather":
+        build = ctx.stage(j.build, defer=not ctx.settings.hoist)
+        idx = stream.cols[j.stream_key].arr
+        bmask_g = None
+        if build.mask is not None:
+            bmask_g = be.take(build.mask, idx)
+        cols = dict(stream.cols)
+        for name, b in build.cols.items():
+            if name in cols:
+                continue
+            g = be.take(b.arr, idx)
+            if j.kind == "left" and bmask_g is not None and g.ndim == 1:
+                g = xp.where(bmask_g, g, 0)  # missing match -> default 0
+            cols[name] = Binding(g, b.kind, b.table, b.col)
+        mask = stream.mask
+        if j.kind != "left" and bmask_g is not None:
+            mask = and_masks(xp, mask, bmask_g)
+        out = Frame(cols, mask)
+        _apply_pending(out, build, ctx)
+        return ctx.barrier(out)
+
+    if j.strategy == "bucket_gather":
+        # composite-PK join via the load-time 2-D partitioned array
+        # (§3.2.1): bucket on key1, discriminate on key2 within the
+        # statically-bounded bucket width.
+        build = ctx.stage(j.build, defer=not ctx.settings.hoist)
+        w = j.bucket_width
+        mat = ctx.input(
+            f"{j.build_table}/fkbucket/{j.build_key}",
+            lambda: ctx.db.fk_bucket(j.build_table, j.build_key)[0])
+        rows = be.take(mat, stream.cols[j.stream_key].arr)   # (n, W)
+        bkey2 = build.cols[j.build_key2].arr
+        skey2 = stream.cols[j.stream_key2].arr
+        bmask = build.mask
+        idx = None
+        hit = None
+        for slot in range(w):
+            r = rows[:, slot]
+            ok = r >= 0
+            cand = be.take(bkey2, xp.clip(r, 0, None))
+            m = ok & (cand == skey2)
+            if bmask is not None:
+                m = m & be.take(bmask, xp.clip(r, 0, None))
+            idx = xp.where(m, r, 0) if idx is None else xp.where(m, r, idx)
+            hit = m if hit is None else (hit | m)
+        cols = dict(stream.cols)
+        for name, b in build.cols.items():
+            if name in cols:
+                continue
+            cols[name] = Binding(be.take(b.arr, idx), b.kind, b.table, b.col)
+        out = Frame(cols, and_masks(xp, stream.mask, hit))
+        _apply_pending(out, build, ctx)
+        return ctx.barrier(out)
+
+    if j.strategy == "exists_flag":
+        build = ctx.stage(j.build)
+        n_b = frame_nrows(build)
+        bkey = build.cols[j.build_key].arr
+        bm = build.mask if build.mask is not None else ones_mask(xp, n_b)
+        flags = be.segment_max(bm.astype(np.int32), bkey, j.domain, 0) > 0
+        hit = be.take(flags, stream.cols[j.stream_key].arr)
+        if j.kind == "anti":
+            hit = ~hit
+        stream.mask = and_masks(xp, stream.mask, hit)
+        return ctx.barrier(stream)
+
+    # generic sort-based equi join (build keys unique: PK or group keys)
+    build = ctx.stage(j.build)
+    n_b = frame_nrows(build)
+    if j.stream_key2 is not None:
+        # composite key: pack into uint32 (k1·K2 + k2; bound documented)
+        k2b = _key2_bound(j, stream, build)
+        bkey = (build.cols[j.build_key].arr.astype(np.uint32) * k2b
+                + build.cols[j.build_key2].arr.astype(np.uint32))
+        skey_stream = (stream.cols[j.stream_key].arr.astype(np.uint32)
+                       * k2b
+                       + stream.cols[j.stream_key2].arr.astype(np.uint32))
+        sentinel = np.uint32(2**32 - 1)
+    else:
+        bkey = build.cols[j.build_key].arr.astype(np.int32)
+        skey_stream = stream.cols[j.stream_key].arr
+        sentinel = I32MAX
+    bm = build.mask if build.mask is not None else ones_mask(xp, n_b)
+    keys = xp.where(bm, bkey, sentinel)
+    order = xp.argsort(keys)
+    skeys = be.take(keys, order)
+    pos = be.searchsorted(skeys, skey_stream)
+    pos = xp.clip(pos, 0, max(n_b - 1, 0))
+    hit = be.take(skeys, pos) == skey_stream
+    if j.kind == "semi":
+        stream.mask = and_masks(xp, stream.mask, hit)
+        return ctx.barrier(stream)
+    if j.kind == "anti":
+        stream.mask = and_masks(xp, stream.mask, ~hit)
+        return ctx.barrier(stream)
+    bidx = be.take(order, pos)
+    cols = dict(stream.cols)
+    for name, b in build.cols.items():
+        if name in cols:
+            continue
+        g = be.take(b.arr, bidx)
+        if j.kind == "left" and g.ndim == 1:
+            g = xp.where(hit, g, 0)
+        cols[name] = Binding(g, b.kind, b.table, b.col)
+    mask = stream.mask if j.kind == "left" else and_masks(xp, stream.mask, hit)
+    return ctx.barrier(Frame(cols, mask))
+
+
+def _key2_bound(j: ir.Join, stream: Frame, build: Frame) -> np.uint32:
+    """Static bound for the second key (from base-table stats)."""
+    for frame in (build, stream):
+        key = j.build_key2 if frame is build else j.stream_key2
+        b = frame.cols[key]
+        if b.table is not None and b.col in b.table.stats:
+            return np.uint32(int(b.table.stats[b.col].max) + 1)
+    return np.uint32(1 << 20)

@@ -1,0 +1,54 @@
+"""Limit, with the beyond-paper ORDER BY + LIMIT k -> top-k rewrite.
+
+The global sort over the padded aggregation domain is wasted work when only
+k rows survive; with `Settings.topk_limit` the primary sort key feeds a
+top-k selection and only the k survivors are fully sorted.  `Limit.n` must
+be a static int by the time staging runs (a Param limit is compile-time and
+resolved by the ParamBinding pass).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ir
+from repro.core.expr import Param
+from repro.core.operators.base import (Binding, F32BIG, Frame, StageCtx,
+                                       frame_nrows)
+from repro.core.operators.sort import sort_frame
+
+
+def stage(lim: ir.Limit, ctx: StageCtx, defer: bool = False) -> Frame:
+    if isinstance(lim.n, Param):
+        raise TypeError(f"Limit parameter {lim.n.name!r} must be bound at "
+                        "compile time (top-k needs a static k)")
+    if (ctx.settings.topk_limit and isinstance(lim.child, ir.Sort)
+            and lim.child.keys):
+        srt = lim.child
+        f = ctx.stage(srt.child)
+        name0, asc0 = srt.keys[0]
+        b0 = f.cols[name0]
+        if b0.arr.ndim == 1:
+            be, xp = ctx.backend, ctx.xp
+            n_rows = frame_nrows(f)
+            k = min(lim.n, n_rows)
+            key = b0.arr.astype(np.float32)
+            key = key if not asc0 else -key
+            if f.mask is not None:
+                key = xp.where(f.mask, key, -F32BIG)
+            if be.name == "jax":
+                import jax
+
+                _, idx = jax.lax.top_k(key, k)
+            else:
+                idx = np.argsort(-key, kind="stable")[:k]
+            cols = {nm: Binding(be.take(b.arr, idx), b.kind, b.table,
+                                b.col) for nm, b in f.cols.items()}
+            mask = None if f.mask is None else be.take(f.mask, idx)
+            sub = Frame(cols, mask)
+            return sort_frame(sub, srt.keys, ctx)
+    f = ctx.stage(lim.child)
+    n = min(lim.n, frame_nrows(f))
+    cols = {name: Binding(b.arr[:n], b.kind, b.table, b.col)
+            for name, b in f.cols.items()}
+    mask = None if f.mask is None else f.mask[:n]
+    return Frame(cols, mask)

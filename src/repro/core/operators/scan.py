@@ -1,0 +1,82 @@
+"""Scan: base-table access with per-query specialized loading (§3.6.1).
+
+Registers exactly the columns the optimized plan references as inputs of
+the staged program, applies the date-clustered permutation slice when
+DateIndex annotated one (§3.2.3), and — under the AoS layout setting —
+forces whole-record reads through an optimization barrier (§3.3).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ir
+from repro.core.operators.base import Binding, Frame, StageCtx
+from repro.relational.schema import ColKind
+
+
+def stage(scan: ir.Scan, ctx: StageCtx, defer: bool = False) -> Frame:
+    db, be, s = ctx.db, ctx.backend, ctx.settings
+    t = db.table(scan.table)
+    cols = scan.columns if scan.columns is not None else t.schema.column_names
+    perm = None
+    if scan.date_slice is not None:
+        ds = scan.date_slice
+        _, start, end = db.date_slice(scan.table, ds.col, ds.lo, ds.hi)
+        pfull = ctx.input(f"{scan.table}/dateperm/{ds.col}",
+                          lambda: db.date_cluster(scan.table, ds.col)[0])
+        perm = pfull[min(start, pfull.shape[0]):min(end, pfull.shape[0])]
+
+    rowmat = None
+    rowcols: list[str] = []
+    if s.layout == "row":
+        rowcols = [c for c in cols
+                   if t.schema.col(c).kind in (ColKind.INT, ColKind.FLOAT,
+                                               ColKind.DATE)]
+        if rowcols:
+            key = f"{scan.table}/rowmat/" + ",".join(rowcols)
+            rowmat = ctx.input(
+                key, lambda: np.stack(
+                    [t.data[c].astype(np.float32) for c in rowcols], axis=1))
+            # The barrier forces the full AoS record to be read before any
+            # column is extracted (paper §3.3: rows can't skip attributes).
+            rowmat = be.barrier(rowmat)
+            if perm is not None:
+                rowmat = be.barrier(be.take(rowmat, perm))
+
+    bindings: dict[str, Binding] = {}
+    for c in cols:
+        cdef = t.schema.col(c)
+        if cdef.kind in (ColKind.INT, ColKind.FLOAT, ColKind.DATE):
+            if rowmat is not None:
+                j = rowcols.index(c)
+                arr = rowmat[:, j]
+                if cdef.kind != ColKind.FLOAT:
+                    arr = arr.astype(np.int32)
+            else:
+                arr = ctx.input(f"{scan.table}/col/{c}", lambda c=c: t.data[c])
+                if perm is not None:
+                    arr = be.take(arr, perm)
+            bindings[c] = Binding(arr, "num", t, c)
+        elif cdef.kind == ColKind.CAT:
+            if s.string_dict:
+                arr = ctx.input(f"{scan.table}/col/{c}", lambda c=c: t.data[c])
+                kind = "codes"
+            else:
+                arr = ctx.input(f"{scan.table}/chars/{c}",
+                                lambda c=c: t.char_matrix(c))
+                kind = "chars"
+            if perm is not None:
+                arr = be.take(arr, perm)
+            bindings[c] = Binding(arr, kind, t, c)
+        else:  # TEXT
+            if s.string_dict:
+                arr = ctx.input(f"{scan.table}/col/{c}", lambda c=c: t.data[c])
+                kind = "words"
+            else:
+                arr = ctx.input(f"{scan.table}/chars/{c}",
+                                lambda c=c: t.char_matrix(c))
+                kind = "wordchars"
+            if perm is not None:
+                arr = be.take(arr, perm)
+            bindings[c] = Binding(arr, kind, t, c)
+    return Frame(bindings)

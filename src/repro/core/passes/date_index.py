@@ -55,6 +55,10 @@ def _rewrite(p: ir.Plan, db: Database, skip: set[str]) -> ir.Plan:
     bounds: dict[str, dict[str, int]] = {}
     used: dict[str, list] = {}
     for c in parts:
+        # A Param bound (rhs not Const) cannot be resolved to a static row
+        # slice at staging time: the conjunct is left in the Select and the
+        # plan stays param-residual — the predicate evaluates per tuple with
+        # the parameter as a runtime scalar input.
         if not (isinstance(c, Cmp) and isinstance(c.lhs, Col)
                 and isinstance(c.rhs, Const)):
             continue

@@ -49,16 +49,23 @@ class Pass(Protocol):
     def run(self, plan: ir.Plan, db, settings: Settings) -> ir.Plan: ...
 
 
-def build_pipeline(settings: Settings) -> list[Pass]:
+def build_pipeline(settings: Settings, bindings: dict | None = None
+                   ) -> list[Pass]:
     from repro.core.passes.column_pruning import ColumnPruning
     from repro.core.passes.cse_dce import FoldAndSimplify
     from repro.core.passes.date_index import DateIndex
     from repro.core.passes.fusion import SelectFusion
     from repro.core.passes.hashmap_lowering import HashMapLowering
+    from repro.core.passes.param_binding import ParamBinding
     from repro.core.passes.partitioning import Partitioning
     from repro.core.passes.string_dict import StringDictionary
 
     pipeline: list[Pass] = []
+    if bindings:
+        # resolve Params first so every downstream pass sees plain literals
+        # (full specialization); without bindings the plan stays
+        # param-residual and numeric Params become staged-program inputs.
+        pipeline.append(ParamBinding(bindings))
     pipeline.append(SelectFusion())           # always: canonicalizes Select chains
     if settings.cse:
         pipeline.append(FoldAndSimplify())
@@ -77,8 +84,9 @@ def build_pipeline(settings: Settings) -> list[Pass]:
     return pipeline
 
 
-def optimize(plan: ir.Plan, db, settings: Settings) -> ir.Plan:
-    for p in build_pipeline(settings):
+def optimize(plan: ir.Plan, db, settings: Settings,
+             bindings: dict | None = None) -> ir.Plan:
+    for p in build_pipeline(settings, bindings):
         plan = p.run(plan, db, settings)
     return plan
 

@@ -70,6 +70,18 @@ def _map_tree(e, fn):
 
 
 def _lower(e, db: Database, renames: dict[str, str]):
+    from repro.core.expr import Param
+
+    if isinstance(e, (StrEq, StrIn, StrStartsWith, StrContainsWord)):
+        # An unbound string Param has no dictionary code yet: leave the
+        # predicate unlowered (param-residual).  Execution requires the
+        # value, so the runtime layer substitutes string params before
+        # optimization; this branch only matters for plan analysis.
+        vals = {StrEq: lambda: [e.value], StrIn: lambda: list(e.values),
+                StrStartsWith: lambda: [e.prefix],
+                StrContainsWord: lambda: [e.word]}[type(e)]()
+        if any(isinstance(v, Param) for v in vals):
+            return e
     if isinstance(e, StrEq):
         t, c = _owner(db, e.col, renames)
         return CodeEq(e.col, t.encode_const(c, e.value), e.negate)

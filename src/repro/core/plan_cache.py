@@ -1,0 +1,148 @@
+"""Parameterized plan cache: compile once, bind many (runtime layer).
+
+`CompiledQuery` pays pass-pipeline + staging + XLA JIT on every
+construction; for a query server that cost must be amortized across
+executions the way Dashti et al. amortize PL/SQL compilation.  The cache
+key is
+
+    (canonicalized plan structure, engine settings, database identity)
+
+where "canonicalized plan structure" is the repr of the *logical* plan
+after compile-time parameters (string values, Limit.n) have been
+substituted — so two requests for the same plan shape share one staged
+program, while requests differing in a compile-time value are distinct
+entries.  Runtime (numeric) parameters never enter the key: the hit path
+re-binds them into the already-jitted XLA callable (`CompiledQuery.run`),
+dropping repeated-query latency from full-JIT cost to bind+execute cost.
+
+Two modes:
+
+  residual   (default) — numeric params stay runtime inputs; one cache
+             entry serves every binding.
+  specialize — all params are baked in as literals (the paper's fully
+             specialized program); each distinct binding is its own entry.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Optional
+
+from repro.core import compile as compile_mod
+from repro.core import ir
+from repro.core.compile import CompiledQuery
+from repro.core.passes.param_binding import bind_plan, plan_params
+from repro.core.passes.pipeline import Settings
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    compiles: int = 0     # CompiledQuery constructions (stagings + JITs)
+    evictions: int = 0
+
+
+class PlanCache:
+    def __init__(self, db, max_entries: int = 128):
+        self.db = db
+        self.max_entries = max_entries
+        self.stats = CacheStats()
+        self._entries: "OrderedDict[tuple, CompiledQuery]" = OrderedDict()
+        self._lock = threading.RLock()
+
+    # -- keying ----------------------------------------------------------------
+    def _prepare(self, plan: ir.Plan, settings: Settings,
+                 bindings: Optional[dict], mode: str):
+        """(key, plan, runtime bindings, plan_owned) for a request.
+
+        Bindings are validated here so cache hits and misses behave
+        identically: every request must name exactly the plan's parameters
+        — a missing or misspelled binding raises whether or not the entry
+        is already warm (a warm entry must never silently fall back to the
+        first request's values).  `plan_owned` is True when `plan` is a
+        private copy safe to hand to CompiledQuery (whose passes mutate it).
+        """
+        if mode not in ("residual", "specialize"):
+            raise ValueError(f"unknown mode {mode!r}")
+        bindings = dict(bindings or {})
+        spec = plan_params(plan)
+        unknown = sorted(set(bindings) - set(spec))
+        if unknown:
+            raise KeyError(f"unknown parameters {unknown}; this plan takes "
+                           f"{sorted(spec)}")
+        missing = sorted(set(spec) - set(bindings))
+        if missing:
+            raise KeyError(f"no binding supplied for parameters {missing}")
+        baked = set(spec) if mode == "specialize" else \
+            {n for n, i in spec.items() if i.structural}
+        owned = False
+        if baked:
+            # substitution mutates expression slots: work on a copy
+            plan = bind_plan(copy.deepcopy(plan),
+                             {n: bindings[n] for n in baked})
+            owned = True
+        runtime = {n: v for n, v in bindings.items() if n not in baked}
+        # dataclass reprs are recursive and deterministic: they canonicalize
+        # the full plan structure including substituted literals.
+        key = (repr(plan), dataclasses.astuple(settings), id(self.db))
+        return key, plan, runtime, owned
+
+    def key_for(self, plan: ir.Plan, settings: Settings,
+                bindings: Optional[dict] = None,
+                mode: str = "residual") -> tuple:
+        return self._prepare(plan, settings, bindings, mode)[0]
+
+    def contains(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    # -- the cache -------------------------------------------------------------
+    def _get_prepared(self, key: tuple, plan: ir.Plan, runtime: dict,
+                      owned: bool, settings: Settings) -> CompiledQuery:
+        with self._lock:
+            cq = self._entries.get(key)
+            if cq is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return cq
+            self.stats.misses += 1
+        # compile outside the lock (long); concurrent duplicate compiles are
+        # prevented one level up by QueryServer's in-flight dedup.  Passes
+        # mutate the plan, so compile from a private copy.
+        cq = CompiledQuery(plan if owned else copy.deepcopy(plan),
+                           self.db, settings, params=runtime)
+        with self._lock:
+            self.stats.compiles += 1
+            self._entries[key] = cq
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+        return cq
+
+    def get(self, plan: ir.Plan, settings: Settings,
+            bindings: Optional[dict] = None, mode: str = "residual"
+            ) -> tuple[CompiledQuery, dict]:
+        """(compiled query, runtime bindings for this request); compiles on
+        miss.  The hit path performs no staging and no JIT."""
+        key, prepared, runtime, owned = self._prepare(plan, settings,
+                                                      bindings, mode)
+        return self._get_prepared(key, prepared, runtime, owned,
+                                  settings), runtime
+
+    def execute(self, plan: ir.Plan, settings: Settings,
+                bindings: Optional[dict] = None, mode: str = "residual"):
+        cq, runtime = self.get(plan, settings, bindings, mode)
+        return cq.run(runtime)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    @staticmethod
+    def stagings() -> int:
+        """Global CompiledQuery construction count (for compile-counter
+        assertions independent of cache bookkeeping)."""
+        return compile_mod.STAGINGS

@@ -34,8 +34,9 @@ class _Env(EvalEnv):
     """Columns are numpy arrays; strings resolved through char matrices."""
 
     def __init__(self, cols: dict[str, np.ndarray],
-                 chars: dict[str, np.ndarray]):
-        super().__init__(np, cse=False)   # the baseline does not CSE
+                 chars: dict[str, np.ndarray],
+                 params: dict | None = None):
+        super().__init__(np, cse=False, params=params)  # baseline: no CSE
         self.cols = cols
         self.chars = chars
 
@@ -71,8 +72,8 @@ class Relation:
         return Relation({k: v[idx] for k, v in self.cols.items()},
                         {k: v[idx] for k, v in self.chars.items()})
 
-    def env(self) -> _Env:
-        return _Env(self.cols, self.chars)
+    def env(self, params: dict | None = None) -> _Env:
+        return _Env(self.cols, self.chars, params)
 
     def key_for_sort(self, name: str, asc: bool) -> np.ndarray:
         if name in self.cols:
@@ -88,15 +89,32 @@ class VolcanoEngine:
     def __init__(self, db: Database):
         self.db = db
 
-    def execute(self, plan: ir.Plan) -> dict[str, np.ndarray]:
-        rel = self._exec(plan)
+    def execute(self, plan: ir.Plan,
+                params: dict | None = None) -> dict[str, np.ndarray]:
+        params = dict(params or {})
+        if params:
+            # compile-time params (string values, Limit.n) have no runtime
+            # representation even in the oracle: substitute them up front.
+            # Numeric params evaluate through the expression environment.
+            # (params travel as an explicit argument so one engine stays
+            # reentrant across concurrent execute calls.)
+            from repro.core.passes.param_binding import bind_plan, plan_params
+
+            import copy
+
+            structural = {n: params[n]
+                          for n, i in plan_params(plan).items()
+                          if i.structural and n in params}
+            if structural:
+                plan = bind_plan(copy.deepcopy(plan), structural)
+        rel = self._exec(plan, params)
         out = dict(rel.cols)
         for name, mat in rel.chars.items():
             out[name] = _decode_chars(mat)
         return out
 
     # ------------------------------------------------------------------
-    def _exec(self, p: ir.Plan) -> Relation:
+    def _exec(self, p: ir.Plan, params: dict) -> Relation:
         if isinstance(p, ir.Scan):
             t = self.db.table(p.table)
             cols, chars = {}, {}
@@ -110,15 +128,15 @@ class VolcanoEngine:
             return Relation(cols, chars)
 
         if isinstance(p, ir.Select):
-            rel = self._exec(p.child)
-            m = eval_expr(p.pred, rel.env())
+            rel = self._exec(p.child, params)
+            m = eval_expr(p.pred, rel.env(params))
             return rel.take(np.flatnonzero(m))
 
         if isinstance(p, ir.Project):
-            rel = self._exec(p.child)
+            rel = self._exec(p.child, params)
             cols = dict(rel.cols) if p.keep_input else {}
             chars = dict(rel.chars) if p.keep_input else {}
-            env = rel.env()
+            env = rel.env(params)
             for name, e in p.outputs.items():
                 from repro.core.expr import Col
                 if isinstance(e, Col) and e.name in rel.chars:
@@ -128,8 +146,8 @@ class VolcanoEngine:
             return Relation(cols, chars)
 
         if isinstance(p, ir.Join):
-            stream = self._exec(p.stream)
-            build = self._exec(p.build)
+            stream = self._exec(p.stream, params)
+            build = self._exec(p.build, params)
             skey = stream.cols[p.stream_key]
             bkey = build.cols[p.build_key]
             if p.stream_key2 is not None:   # composite key: pack into int64
@@ -169,8 +187,8 @@ class VolcanoEngine:
             return out
 
         if isinstance(p, ir.Agg):
-            rel = self._exec(p.child)
-            env = rel.env()
+            rel = self._exec(p.child, params)
+            env = rel.env(params)
             n = rel.nrows
             if not p.group_by:
                 cols = {}
@@ -228,14 +246,17 @@ class VolcanoEngine:
             return Relation(out_cols, out_chars)
 
         if isinstance(p, ir.Sort):
-            rel = self._exec(p.child)
+            rel = self._exec(p.child, params)
             keys = [rel.key_for_sort(name, asc) for name, asc in p.keys]
             order = np.lexsort(tuple(reversed(keys)))
             return rel.take(order)
 
         if isinstance(p, ir.Limit):
-            rel = self._exec(p.child)
-            return rel.take(np.arange(min(p.n, rel.nrows)))
+            rel = self._exec(p.child, params)
+            n = p.n
+            if not isinstance(n, (int, np.integer)):   # residual Param limit
+                n = int(params[n.name])
+            return rel.take(np.arange(min(n, rel.nrows)))
 
         raise TypeError(type(p))
 

@@ -12,7 +12,7 @@ feature: correlated sub-queries are rewritten the same way Q17/Q18 are).
 """
 from __future__ import annotations
 
-from repro.core.expr import (And, Arith, Cmp, Col, Const, Not, Or,
+from repro.core.expr import (And, Arith, Cmp, Col, Const, Not, Or, Param,
                              StrContainsWord, StrEq, StrIn, StrStartsWith,
                              Where, Year, col, lit)
 from repro.core.ir import Agg, AggSpec, Join, Limit, Plan, Project, Scan, Select, Sort
@@ -282,4 +282,75 @@ QUERIES: dict[str, object] = {
     "q1": q1, "q3": q3, "q4": q4, "q5": q5, "q6": q6, "q7": q7, "q9": q9,
     "q9full": q9_full, "q10": q10, "q12": q12, "q13": q13, "q14": q14,
     "q17": q17, "q18": q18, "q19": q19,
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameterized variants (compile-once / bind-many, the runtime layer's
+# workload).  Numeric Params are runtime-bound scalar inputs of the staged
+# program; the string segment and the Limit count are compile-time params
+# (part of the plan-cache key).  Each default binding reproduces the literal
+# query above exactly.
+# ---------------------------------------------------------------------------
+
+def q1_param() -> Plan:
+    plan = q1()
+    sel = plan.child.child          # Sort -> Agg -> Select
+    sel.pred = Cmp("<=", col("l_shipdate"), Param("shipdate_hi", "int32"))
+    return plan
+
+
+Q1_DEFAULTS = {"shipdate_hi": days("1998-09-02")}
+
+
+def q3_param() -> Plan:
+    cutoff = Param("cutoff", "int32")
+    li = Select(Scan("lineitem"), Cmp(">", col("l_shipdate"), cutoff))
+    orders = Select(Scan("orders"), Cmp("<", col("o_orderdate"), cutoff))
+    cust = Select(Scan("customer"),
+                  StrEq("c_mktsegment", Param("segment", "str")))
+    j1 = Join(li, orders, "l_orderkey", "o_orderkey")
+    j2 = Join(j1, cust, "o_custkey", "c_custkey")
+    agg = Agg(j2, ["l_orderkey"],
+              [AggSpec("revenue", "sum", _revenue())],
+              carry=["o_orderdate", "o_shippriority"])
+    srt = Sort(agg, [("revenue", False), ("o_orderdate", True)])
+    return Limit(srt, Param("topn", "int32"))
+
+
+Q3_DEFAULTS = {"cutoff": days("1995-03-15"), "segment": "BUILDING",
+               "topn": 10}
+
+
+def q6_param() -> Plan:
+    pred = And(And(And(Cmp(">=", col("l_shipdate"), Param("date_lo", "int32")),
+                       Cmp("<", col("l_shipdate"), Param("date_hi", "int32"))),
+               And(Cmp(">=", col("l_discount"), Param("disc_lo", "float32")),
+                   Cmp("<=", col("l_discount"), Param("disc_hi", "float32")))),
+               Cmp("<", col("l_quantity"), Param("qty_max", "float32")))
+    sel = Select(Scan("lineitem"), pred)
+    return Agg(sel, [], [AggSpec("revenue", "sum",
+                                 Arith("*", col("l_extendedprice"),
+                                       col("l_discount")))])
+
+
+Q6_DEFAULTS = {"date_lo": days("1994-01-01"), "date_hi": days("1995-01-01"),
+               "disc_lo": 0.05, "disc_hi": 0.07, "qty_max": 24.0}
+
+
+# name -> (plan builder, default bindings matching the literal query)
+PARAM_QUERIES: dict[str, tuple] = {
+    "q1": (q1_param, Q1_DEFAULTS),
+    "q3": (q3_param, Q3_DEFAULTS),
+    "q6": (q6_param, Q6_DEFAULTS),
+}
+
+# alternative runtime bindings (overlay on the defaults) used by the cache
+# tests and bench_plan_cache to exercise the re-bind path with a different,
+# non-empty result
+PARAM_ALT_BINDINGS: dict[str, dict] = {
+    "q1": {"shipdate_hi": days("1997-06-30")},
+    "q3": {"cutoff": days("1995-06-15")},
+    "q6": {"date_lo": days("1995-01-01"), "date_hi": days("1996-01-01"),
+           "qty_max": 30.0},
 }

@@ -1,0 +1,135 @@
+"""Concurrent parameterized query server over the plan cache.
+
+The analytics twin of `batcher.py`'s serving engine: requests arrive
+concurrently, each naming a plan + parameter bindings; execution goes
+through a shared `PlanCache` so only the first request for a plan shape
+pays staging + XLA JIT, and *in-flight* compilations are deduplicated — a
+request arriving while another request is already compiling the same key
+parks on that compilation instead of starting a second one, then executes
+through the (now warm) cache.
+
+Two driving styles, mirroring `batcher.py`'s tick discipline:
+
+  * `submit()` returns a `concurrent.futures.Future`; a thread pool
+    overlaps compilations and executions (bind+run of distinct compiled
+    queries is embarrassingly parallel on CPU).
+  * `serve_batch()` submits a list of requests and drains — the
+    deterministic form the tests exercise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Optional
+
+from repro.core import ir
+from repro.core.passes.pipeline import Settings, preset
+from repro.core.plan_cache import PlanCache
+
+
+@dataclasses.dataclass
+class ServerStats:
+    submitted: int = 0
+    completed: int = 0
+    errors: int = 0
+    shared_compiles: int = 0   # requests that parked on an in-flight compile
+
+
+class QueryServer:
+    def __init__(self, db, settings: Optional[Settings] = None, *,
+                 cache: Optional[PlanCache] = None, max_workers: int = 4,
+                 compile_hook: Optional[Callable] = None):
+        self.db = db
+        self.settings = settings or preset("opt")
+        self.cache = cache or PlanCache(db)
+        self.stats = ServerStats()
+        self.compile_hook = compile_hook   # test seam: called pre-compile
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="query-server")
+        self._lock = threading.Lock()
+        self._inflight: dict[tuple, threading.Event] = {}
+        self._futures: list[Future] = []
+        self._closed = False
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, plan: ir.Plan, bindings: Optional[dict] = None,
+               mode: str = "residual") -> Future:
+        if self._closed:
+            raise RuntimeError("server is closed")
+        fut = self._pool.submit(self._handle, plan, bindings, mode)
+        with self._lock:
+            self.stats.submitted += 1
+            # completed futures (and their pinned results) don't accumulate
+            self._futures = [f for f in self._futures if not f.done()]
+            self._futures.append(fut)
+        return fut
+
+    def serve_batch(self, requests) -> list:
+        """Submit (plan, bindings) pairs together and drain in order."""
+        futs = [self.submit(plan, bindings) for plan, bindings in requests]
+        return [f.result() for f in futs]
+
+    def drain(self) -> None:
+        with self._lock:
+            pending = list(self._futures)
+        for f in pending:
+            f.exception()   # wait; errors surface via the future
+        with self._lock:
+            self._futures = [f for f in self._futures if not f.done()]
+
+    def close(self) -> None:
+        self._closed = True
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- request path ---------------------------------------------------------
+    def _handle(self, plan, bindings, mode):
+        try:
+            # one canonicalization per request: the (key, plan, runtime)
+            # triple feeds dedup, compile, and execute below.
+            key, prepared, runtime, owned = self.cache._prepare(
+                plan, self.settings, bindings, mode)
+            # dedup loop: parked requests re-enter after the owner finishes,
+            # so if the owner's compilation *failed* (cache still cold) one
+            # waiter becomes the new owner instead of every waiter compiling
+            # at once.
+            cq = None
+            while cq is None:
+                owner, event = False, None
+                with self._lock:
+                    event = self._inflight.get(key)
+                    if event is None and not self.cache.contains(key):
+                        event = threading.Event()
+                        self._inflight[key] = event
+                        owner = True
+                    elif event is not None:
+                        self.stats.shared_compiles += 1
+                if owner:
+                    try:
+                        if self.compile_hook is not None:
+                            self.compile_hook(key)
+                        cq = self.cache._get_prepared(key, prepared, runtime,
+                                                      owned, self.settings)
+                    finally:
+                        with self._lock:
+                            self._inflight.pop(key, None)
+                        event.set()
+                elif event is not None:
+                    event.wait()   # then re-check: hit, or take ownership
+                else:
+                    cq = self.cache._get_prepared(key, prepared, runtime,
+                                                  owned, self.settings)
+            result = cq.run(runtime)
+            with self._lock:
+                self.stats.completed += 1
+            return result
+        except BaseException:
+            with self._lock:
+                self.stats.errors += 1
+            raise

@@ -1,0 +1,10 @@
+"""Shared fixtures: one TPC-H database for the whole session (generation +
+auxiliary-structure builds dominate per-module setup cost otherwise)."""
+import pytest
+
+from repro.relational import Database
+
+
+@pytest.fixture(scope="session")
+def db():
+    return Database.tpch(sf=0.01, seed=0)

@@ -11,6 +11,16 @@ from repro.models.config import SHAPES
 
 CTX = Ctx(mesh=None)
 
+# The full 3-test x 11-arch smoke matrix costs many minutes of CPU jit; by
+# default one representative of each family runs (dense attention, MoE,
+# recurrent/xLSTM).  `pytest -m slow` (or `-m ""`) restores the full matrix.
+FAST_ARCHS = ["qwen1_5_0_5b", "granite_moe_1b_a400m", "xlstm_125m"]
+ARCH_PARAMS = [
+    pytest.param(a) if a in FAST_ARCHS
+    else pytest.param(a, marks=pytest.mark.slow)
+    for a in ARCHS
+]
+
 
 def _batch(cfg, b=2, s=16):
     rng = np.random.default_rng(0)
@@ -28,7 +38,7 @@ def _batch(cfg, b=2, s=16):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_forward(arch):
     cfg = smoke_config(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -40,7 +50,7 @@ def test_smoke_forward(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_train_step(arch):
     from repro.train.train_step import make_train_state, train_step
 
@@ -58,7 +68,7 @@ def test_smoke_train_step(arch):
     assert delta > 0
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_decode(arch):
     cfg = smoke_config(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)

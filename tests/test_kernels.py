@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings as hsettings, strategies as st
+
+try:
+    from hypothesis import given, settings as hsettings, strategies as st
+except ImportError:   # degrade gracefully: property tests skip, rest run
+    from _hypothesis_stub import given, hsettings, st  # noqa: F401
 
 from repro.kernels import ops, ref
 

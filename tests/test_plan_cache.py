@@ -1,0 +1,163 @@
+"""Runtime layer: plan cache hit/miss accounting, param-bound vs
+literal-baked equivalence, single-staging re-binding (the compile-counter
+acceptance criterion), and the concurrent query server incl. two requests
+sharing one in-flight compilation."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import CompiledQuery, PlanCache, VolcanoEngine, preset
+from repro.core import compile as compile_mod
+from repro.relational.queries import (PARAM_ALT_BINDINGS as ALT_BINDINGS,
+                                      PARAM_QUERIES, QUERIES)
+from repro.relational.schema import days
+from repro.serve.query_server import QueryServer
+from test_queries import assert_same
+
+CONFIGS = ["naive", "template", "tpch", "strdict", "opt"]
+
+
+def assert_matches(got, want):
+    # param results compare row-order-insensitively: ties under alternative
+    # bindings may sort differently between engines
+    assert_same(got, want, sort_insensitive=True)
+
+
+# ---------------------------------------------------------------------------
+# acceptance criterion: same parameterized query, two bindings, ONE staging,
+# both matching the Volcano oracle under every preset in CONFIGS.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("config", CONFIGS)
+def test_rebind_single_staging_matches_oracle(db, config):
+    build, defaults = PARAM_QUERIES["q6"]
+    alt = dict(defaults, **ALT_BINDINGS["q6"])
+    cache = PlanCache(db)
+    oracle = VolcanoEngine(db)
+    before = compile_mod.STAGINGS
+    for bindings in (defaults, alt):
+        got = cache.execute(build(), preset(config), bindings)
+        want = oracle.execute(build(), bindings)
+        assert_matches(got, want)
+    assert compile_mod.STAGINGS - before == 1, \
+        "re-binding must not re-stage/re-JIT"
+    assert cache.stats == type(cache.stats)(hits=1, misses=1, compiles=1)
+    # and the jitted program itself traced exactly once
+    (cq,) = [cache.get(build(), preset(config), defaults)[0]]
+    assert cq.n_traces == 1
+
+
+@pytest.mark.parametrize("qname", sorted(PARAM_QUERIES))
+def test_param_bound_equals_literal_baked(db, qname):
+    """Default bindings reproduce the literal query exactly; alternative
+    bindings match the oracle evaluated under the same bindings."""
+    build, defaults = PARAM_QUERIES[qname]
+    cache = PlanCache(db)
+    got = cache.execute(build(), preset("opt"), defaults)
+    literal = CompiledQuery(QUERIES[qname](), db, preset("opt")).run()
+    assert_matches(got, literal)
+    alt = dict(defaults, **ALT_BINDINGS[qname])
+    assert_matches(cache.execute(build(), preset("opt"), alt),
+                   VolcanoEngine(db).execute(build(), alt))
+
+
+def test_specialize_mode_bakes_every_binding(db):
+    build, defaults = PARAM_QUERIES["q6"]
+    alt = dict(defaults, **ALT_BINDINGS["q6"])
+    cache = PlanCache(db)
+    a = cache.execute(build(), preset("opt"), defaults, mode="specialize")
+    b = cache.execute(build(), preset("opt"), alt, mode="specialize")
+    a2 = cache.execute(build(), preset("opt"), defaults, mode="specialize")
+    assert cache.stats.compiles == 2     # one per distinct binding
+    assert cache.stats.hits == 1         # repeat binding hits
+    assert_matches(a, a2)
+    assert not np.allclose(a["revenue"], b["revenue"])
+
+
+def test_structural_params_key_the_cache(db):
+    """String / limit params are compile-time: a new value is a new cache
+    entry, a repeated value is a hit."""
+    build, defaults = PARAM_QUERIES["q3"]
+    cache = PlanCache(db)
+    cache.execute(build(), preset("opt"), defaults)
+    cache.execute(build(), preset("opt"), dict(defaults, cutoff=days("1995-06-15")))
+    assert cache.stats.compiles == 1     # numeric param: same entry
+    cache.execute(build(), preset("opt"), dict(defaults, segment="MACHINERY"))
+    assert cache.stats.compiles == 2     # string param: new entry
+    cache.execute(build(), preset("opt"), dict(defaults, topn=5))
+    assert cache.stats.compiles == 3     # limit param: new entry
+    got = cache.execute(build(), preset("opt"), dict(defaults, topn=5))
+    assert cache.stats.compiles == 3
+    assert len(next(iter(got.values()))) == 5
+
+
+def test_missing_compile_time_binding_raises(db):
+    build, defaults = PARAM_QUERIES["q3"]
+    cache = PlanCache(db)
+    partial = {k: v for k, v in defaults.items() if k != "segment"}
+    with pytest.raises(KeyError, match="segment"):
+        cache.execute(build(), preset("opt"), partial)
+
+
+def test_cache_eviction_accounting(db):
+    build, defaults = PARAM_QUERIES["q6"]
+    cache = PlanCache(db, max_entries=1)
+    cache.execute(build(), preset("opt"), defaults)
+    cache.execute(build(), preset("naive"), defaults)   # distinct settings
+    assert cache.stats.evictions == 1
+    assert len(cache) == 1
+
+
+# ---------------------------------------------------------------------------
+# query server
+# ---------------------------------------------------------------------------
+
+def test_server_interleaved_concurrent_requests(db):
+    build, defaults = PARAM_QUERIES["q6"]
+    b3, d3 = PARAM_QUERIES["q3"]
+    oracle = VolcanoEngine(db)
+    reqs = [
+        (build(), defaults),
+        (b3(), d3),
+        (build(), dict(defaults, **ALT_BINDINGS["q6"])),
+        (b3(), dict(d3, cutoff=days("1995-06-15"))),
+        (build(), defaults),
+    ]
+    with QueryServer(db, preset("opt"), max_workers=4) as srv:
+        results = srv.serve_batch([(p, dict(b)) for p, b in reqs])
+        stats = srv.stats
+        cache_stats = srv.cache.stats
+    assert stats.completed == len(reqs) and stats.errors == 0
+    assert cache_stats.compiles == 2      # one per distinct plan shape
+    for (plan, bindings), got in zip(reqs, results):
+        assert_matches(got, oracle.execute(plan, bindings))
+
+
+def test_server_shares_one_inflight_compilation(db):
+    """Two concurrent requests for the same plan shape: the second parks on
+    the first's in-flight compilation; exactly one staging happens."""
+    build, defaults = PARAM_QUERIES["q6"]
+    gate, started = threading.Event(), threading.Event()
+
+    def hook(_key):
+        started.set()
+        assert gate.wait(timeout=60)
+
+    before = compile_mod.STAGINGS
+    with QueryServer(db, preset("opt"), compile_hook=hook,
+                     max_workers=4) as srv:
+        f1 = srv.submit(build(), dict(defaults))
+        assert started.wait(timeout=60)   # first request is now compiling
+        f2 = srv.submit(build(), dict(defaults, **ALT_BINDINGS["q6"]))
+        while srv.stats.shared_compiles == 0 and not f2.done():
+            threading.Event().wait(0.01)  # let f2 reach the in-flight check
+        gate.set()
+        r1, r2 = f1.result(120), f2.result(120)
+        assert srv.stats.shared_compiles == 1
+        assert srv.cache.stats.compiles == 1
+    assert compile_mod.STAGINGS - before == 1
+    oracle = VolcanoEngine(db)
+    assert_matches(r1, oracle.execute(build(), defaults))
+    assert_matches(r2, oracle.execute(build(),
+                                      dict(defaults, **ALT_BINDINGS["q6"])))

@@ -4,15 +4,20 @@ import numpy as np
 import pytest
 
 from repro.core import CompiledQuery, VolcanoEngine, preset
-from repro.relational import Database
 from repro.relational.queries import QUERIES
 
 CONFIGS = ["naive", "template", "tpch", "strdict", "opt"]
 
-
-@pytest.fixture(scope="module")
-def db():
-    return Database.tpch(sf=0.01, seed=0)
+# The exhaustive 5-config x 15-query sweep takes many minutes; by default
+# only the ladder endpoints run (naive = compilation without domain
+# knowledge, opt = everything).  `pytest -m slow` (or `-m ""`) restores the
+# full matrix.
+FAST_CONFIGS = ["naive", "opt"]
+CONFIG_PARAMS = [
+    pytest.param(c) if c in FAST_CONFIGS
+    else pytest.param(c, marks=pytest.mark.slow)
+    for c in CONFIGS
+]
 
 
 @pytest.fixture(scope="module")
@@ -53,7 +58,7 @@ def assert_same(a: dict, b: dict, sort_insensitive: bool):
 SORT_INSENSITIVE = {"q10", "q18", "q3"}
 
 
-@pytest.mark.parametrize("config", CONFIGS)
+@pytest.mark.parametrize("config", CONFIG_PARAMS)
 @pytest.mark.parametrize("qname", sorted(QUERIES))
 def test_engine_matches_oracle(db, oracle, qname, config):
     cq = CompiledQuery(QUERIES[qname](), db, preset(config))

@@ -27,9 +27,13 @@ def test_collective_parser_operand_bytes():
     assert out["total"] == out["all-reduce"] + out["all-gather"]
 
 
+@pytest.mark.slow
 def test_cost_analysis_is_per_device():
     """Calibration quoted in roofline.py: SPMD cost analysis reports
-    per-device flops (exact 2MKN / n_devices for a sharded matmul)."""
+    per-device flops (exact 2MKN / n_devices for a sharded matmul).
+
+    slow: forks an 8-host-device XLA compilation subprocess, which takes
+    multiple minutes on constrained CPU containers."""
     code = textwrap.dedent("""\
       import os
       os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

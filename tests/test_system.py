@@ -3,20 +3,18 @@ per-query specialized input sets, and a property test driving random
 queries through both engines."""
 import numpy as np
 import pytest
-from hypothesis import given, settings as hsettings, strategies as st
+
+try:
+    from hypothesis import given, settings as hsettings, strategies as st
+except ImportError:   # degrade gracefully: property tests skip, rest run
+    from _hypothesis_stub import given, hsettings, st  # noqa: F401
 
 from repro.core import CompiledQuery, VolcanoEngine, optimize, preset
 from repro.core import ir
 from repro.core.expr import (And, Arith, Cmp, CodeIn, CodeRange, Col, Const,
                              StrIn, col, lit)
 from repro.core.ir import Agg, AggSpec, Join, Scan, Select
-from repro.relational import Database
 from repro.relational.queries import QUERIES, q12
-
-
-@pytest.fixture(scope="module")
-def db():
-    return Database.tpch(sf=0.01, seed=1)
 
 
 def _find(plan, typ):
