@@ -1,0 +1,131 @@
+"""Vectorized bind-many throughput: one vmapped XLA dispatch for N
+concurrent bindings vs the PR 2 sequential rebind loop.
+
+The serving scenario: thousands of concurrent requests bind the *same*
+cached plan under different `param/<name>` scalars.  PR 2's hit path
+re-executes the scalar program once per request (N dispatches); the
+batched path stacks the bindings on a leading axis and runs the vmapped
+program once, with table data shared across the batch (`in_axes=None`).
+
+For each parameterized query, measure per-binding latency at batch sizes
+1/4/16/64 through `CompiledQuery.run_many` (power-of-two buckets, so each
+size is its own trace exactly once), plus the sequential rebind loop over
+the same 64 bindings.  Writes `BENCH_batched_bindings.json` (or
+$REPRO_BENCH_BATCHED_OUT).
+
+The scale factor is deliberately serving-sized (REPRO_BATCH_SF, default
+0.01): dispatch overhead, not scan bandwidth, is what batching
+amortizes, and the superlinear per-binding drop is the acceptance
+criterion for the batched runtime layer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import PlanCache, preset
+from repro.core import compile as compile_mod
+from repro.relational import Database
+from repro.relational.queries import PARAM_QUERIES
+from repro.relational.schema import days
+
+from benchmarks.common import REPEATS
+
+SF = float(os.environ.get("REPRO_BATCH_SF", "0.01"))
+BATCHES = (1, 4, 16, 64)
+
+
+def bindings_for(qname: str, n: int) -> list[dict]:
+    """n distinct bindings varying only *runtime* params, so every one
+    shares the same plan key (and therefore the same batch group)."""
+    _, defaults = PARAM_QUERIES[qname]
+    out = []
+    for i in range(n):
+        b = dict(defaults)
+        if qname == "q1":
+            b["shipdate_hi"] = days("1996-01-01") + 13 * i
+        elif qname == "q3":
+            b["cutoff"] = days("1995-01-01") + 5 * i
+        elif qname == "q6":
+            b["qty_max"] = 10.0 + 0.35 * i
+        elif qname == "q12":
+            b["receipt_lo"] = days("1994-01-01") + 4 * i
+            b["receipt_hi"] = days("1995-01-01") + 4 * i
+        elif qname == "q14":
+            b["ship_lo"] = days("1994-01-01") + 7 * i
+            b["ship_hi"] = days("1994-02-01") + 7 * i
+        elif qname == "q19":
+            b["qty1_lo"] = 1.0 + 0.1 * i
+            b["qty2_lo"] = 8.0 + 0.1 * i
+            b["qty3_lo"] = 16.0 + 0.1 * i
+        out.append(b)
+    return out
+
+
+def run(out=print) -> dict:
+    database = Database.tpch(sf=SF, seed=0)
+    cache = PlanCache(database)
+    settings = preset("opt")
+    repeats = max(3, REPEATS)
+    results: dict = {"sf": SF, "batch_sizes": list(BATCHES)}
+
+    for qname in sorted(PARAM_QUERIES):
+        build, defaults = PARAM_QUERIES[qname]
+        cq, _ = cache.get(build(), settings, defaults)
+        per_binding: dict[int, float] = {}
+        for bsz in BATCHES:
+            bl = bindings_for(qname, bsz)
+            runtimes = [{k: b[k] for k in cq.param_spec} for b in bl]
+            cache.run_many(cq, runtimes)   # warm: trace + compile bucket
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                cache.run_many(cq, runtimes)
+                times.append(time.perf_counter() - t0)
+            per_binding[bsz] = min(times) / bsz
+            out(f"batched/{qname}/batch{bsz}/per_binding,"
+                f"{per_binding[bsz] * 1e6:.1f},us")
+
+        # the PR 2 baseline: N sequential scalar dispatches
+        bl = bindings_for(qname, max(BATCHES))
+        runtimes = [{k: b[k] for k in cq.param_spec} for b in bl]
+        cq.run(runtimes[0])                # warm scalar program
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for r in runtimes:
+                cq.run(r)
+            times.append(time.perf_counter() - t0)
+        loop_per_binding = min(times) / len(runtimes)
+        out(f"batched/{qname}/rebind_loop/per_binding,"
+            f"{loop_per_binding * 1e6:.1f},us")
+
+        results[qname] = {
+            "per_binding_s": {str(b): per_binding[b] for b in BATCHES},
+            "rebind_loop_per_binding_s": loop_per_binding,
+            "speedup_batch64_vs_batch1":
+                per_binding[1] / max(per_binding[64], 1e-12),
+            "speedup_batch64_vs_rebind_loop":
+                loop_per_binding / max(per_binding[64], 1e-12),
+            "batch_traces": cq.n_batch_traces,
+        }
+        out(f"batched/{qname}/speedup_64_vs_1,"
+            f"{results[qname]['speedup_batch64_vs_batch1']:.1f},x")
+
+    results["cache_stats"] = {
+        "compiles": cache.stats.compiles,
+        "batch_traces": cache.stats.batch_traces,
+        "padded_slots": cache.stats.padded_slots,
+        "stagings": compile_mod.STAGINGS,
+    }
+    path = os.environ.get("REPRO_BENCH_BATCHED_OUT",
+                          "BENCH_batched_bindings.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    out(f"wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

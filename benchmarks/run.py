@@ -10,9 +10,10 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_ablation, bench_compile, bench_kernels,
-                            bench_ladder, bench_loading, bench_memory,
-                            bench_plan_cache, bench_roofline)
+    from benchmarks import (bench_ablation, bench_batched_bindings,
+                            bench_compile, bench_kernels, bench_ladder,
+                            bench_loading, bench_memory, bench_plan_cache,
+                            bench_roofline)
 
     quick = os.environ.get("REPRO_QUICK") == "1"
     print("name,us_per_call,derived")
@@ -21,6 +22,7 @@ def main() -> None:
     bench_memory.run()
     bench_compile.run()
     bench_plan_cache.run()
+    bench_batched_bindings.run()
     if quick:
         import benchmarks.common as C
         from repro.relational import queries as Q

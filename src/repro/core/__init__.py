@@ -5,7 +5,9 @@ organized in three layers (docs/architecture.md):
   passes/             — the optimization-pass library (paper §3)
   operators/          — physical operators: stage(node, ctx) -> Frame
   compile.py          — the staging driver producing one XLA program
-  plan_cache.py       — runtime: compile-once / bind-many plan cache
+                        (scalar and vmapped bind-many entry points)
+  plan_cache.py       — runtime: compile-once / bind-many plan cache,
+                        batched `execute_many` over plan-key groups
   volcano.py          — interpreted baseline engine (no compilation)
 """
 from repro.core.compile import CompiledQuery

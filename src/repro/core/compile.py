@@ -21,6 +21,15 @@ numeric parameter becomes a *scalar input* of the staged program
 callable under new bindings without re-staging or re-compiling — the
 compile-once / bind-many amortization of Dashti et al.
 
+Beyond bind-many: `run_many(bindings_list)` executes N bindings of the
+same plan as ONE XLA dispatch.  The staged body is wrapped in `jax.vmap`
+with `in_axes=None` for base columns / index structures (table data is
+traced once and shared across the batch) and `in_axes=0` for the
+`param/<name>` scalars, which become leading-axis vectors of shape (B,).
+Batch sizes are padded up to power-of-two buckets (`bucket_size`) by
+repeating the last binding and slicing the results, so batch-size churn
+costs at most log2(max batch) retraces of the vmapped program.
+
 With `Settings.fusion = False` an `optimization_barrier` is placed between
 operator regions, reproducing the limited optimization scope of
 template-expansion query compilers (paper Fig 2) for the ladder experiment.
@@ -49,6 +58,14 @@ _SAMPLE = 8
 # on pool threads, so the increment takes a lock.)
 STAGINGS = 0
 _STAGINGS_LOCK = threading.Lock()
+
+
+def bucket_size(n: int) -> int:
+    """Power-of-two batch bucket: the (B,) param axis is padded up to this
+    so the vmapped program retraces at most log2(max batch) times."""
+    if n < 1:
+        raise ValueError(f"batch must be non-empty (got {n})")
+    return 1 << (n - 1).bit_length()
 
 
 class CompiledQuery:
@@ -107,14 +124,19 @@ class CompiledQuery:
         for name, dtype in self.param_spec.items():
             sampler.param(Param(name, dtype))
 
-        # 2. the staged program.
-        self.n_traces = 0
+        # 2. the staged program.  `body` is the staged walk shared by the
+        #    scalar and the batched entry point; the entry points differ
+        #    only in how the `param/<name>` inputs are shaped (scalar vs
+        #    leading-axis vector split by vmap) and in which trace counter
+        #    they bump.
+        self.n_traces = 0         # scalar program traces (must stay 1)
+        self.n_batch_traces = 0   # vmapped traces: one per new bucket size
+        self.n_executions = 0     # XLA dispatches via run()/run_many()
 
-        def fn(inputs):
-            self.n_traces += 1   # host side effect: runs only while tracing
+        def body(inputs, batched=False):
             ctx = StageCtx(db, settings, JaxBackend(),
                            lambda key, make: inputs[key],
-                           self.param_defaults)
+                           self.param_defaults, batched=batched)
             frame = ctx.stage(self.plan)
             out = {name: b.arr for name, b in frame.cols.items()}
             n = frame_nrows(frame)
@@ -122,8 +144,27 @@ class CompiledQuery:
                 else ctx.xp.ones((n,), dtype=bool)
             return out, mask
 
+        def fn(inputs):
+            self.n_traces += 1   # host side effect: runs only while tracing
+            return body(inputs)
+
+        def fn_many(inputs):
+            # inputs: base columns as in `fn`, `param/<name>` of shape (B,).
+            # vmap splits the param axis, so `body` stages the identical
+            # scalar program per slot while base columns are closed over
+            # (broadcast, in_axes=None): table data enters the XLA program
+            # once, shared across the whole batch.
+            self.n_batch_traces += 1
+            base = {k: v for k, v in inputs.items()
+                    if not k.startswith("param/")}
+            pvec = {k: v for k, v in inputs.items()
+                    if k.startswith("param/")}
+            return jax.vmap(
+                lambda p: body({**base, **p}, batched=True))(pvec)
+
         self.fn = fn
         self._jitted = jax.jit(fn)
+        self._jitted_many = jax.jit(fn_many)
         self.stage_time = time.perf_counter() - t0
         self._compile_time: Optional[float] = None
 
@@ -149,30 +190,77 @@ class CompiledQuery:
         `params=None` executes under the construction-time bindings; a
         non-None dict must name *every* runtime parameter — a partial dict
         would silently mix bindings from two requests."""
-        if params is not None:
-            unknown = sorted(set(params) - set(self.param_spec))
-            if unknown:
-                raise KeyError(f"unknown parameters {unknown}; this plan "
-                               f"takes {sorted(self.param_spec)}")
-            missing = sorted(set(self.param_spec) - set(params))
-            if missing:
-                raise KeyError(f"no binding supplied for parameters "
-                               f"{missing}")
+        merged = self._check_bindings(params)
         if not self.param_spec:
             return self.inputs
-        merged = params if params is not None else self.param_defaults
         inputs = dict(self.inputs)
         for name, dtype in self.param_spec.items():
             inputs[f"param/{name}"] = np.asarray(merged[name], dtype=dtype)
         return inputs
 
+    def _check_bindings(self, params: Optional[dict]) -> dict:
+        if params is None:
+            return self.param_defaults
+        unknown = sorted(set(params) - set(self.param_spec))
+        if unknown:
+            raise KeyError(f"unknown parameters {unknown}; this plan "
+                           f"takes {sorted(self.param_spec)}")
+        missing = sorted(set(self.param_spec) - set(params))
+        if missing:
+            raise KeyError(f"no binding supplied for parameters "
+                           f"{missing}")
+        return params
+
+    def bind_many(self, bindings_list) -> dict[str, np.ndarray]:
+        """Input dict for one *batched* execution: base columns unchanged,
+        `param/<name>` stacked to a (bucket,) leading-axis vector — the
+        batch padded to `bucket_size(B)` by repeating the last binding
+        (callers slice the results back to B rows).  A None entry stands
+        for the construction-time bindings, like `run(params=None)`."""
+        merged = [self._check_bindings(b) for b in bindings_list]
+        pad = bucket_size(len(merged)) - len(merged)
+        merged = merged + [merged[-1]] * pad
+        inputs = dict(self.inputs)
+        for name, dtype in self.param_spec.items():
+            inputs[f"param/{name}"] = np.stack(
+                [np.asarray(b[name], dtype=dtype) for b in merged])
+        return inputs
+
     def run(self, params: Optional[dict] = None) -> dict[str, np.ndarray]:
         import jax
 
+        self.n_executions += 1
         out, mask = self._jitted(self.bind(params))
         out = jax.tree.map(np.asarray, out)
         mask = np.asarray(mask)
         return self._decode(out, mask)
+
+    def run_many(self, bindings_list) -> list[dict[str, np.ndarray]]:
+        """Execute N bindings as ONE XLA dispatch (the vmapped program).
+
+        Returns one decoded result dict per binding, positionally matching
+        `bindings_list`; each is identical to `run(bindings_list[i])`.
+        A plan with no runtime params degenerates to a single scalar
+        execution whose result is replicated."""
+        bindings_list = list(bindings_list)
+        if not bindings_list:
+            return []
+        if not self.param_spec:
+            for b in bindings_list:
+                self._check_bindings(b)
+            res = self.run()
+            # independent array copies per slot, matching N run() calls
+            # (callers may mutate their result in place)
+            return [{k: np.copy(v) for k, v in res.items()}
+                    for _ in bindings_list]
+        import jax
+
+        self.n_executions += 1
+        out, mask = self._jitted_many(self.bind_many(bindings_list))
+        out = jax.tree.map(np.asarray, out)
+        mask = np.asarray(mask)
+        return [self._decode({k: v[i] for k, v in out.items()}, mask[i])
+                for i in range(len(bindings_list))]
 
     def input_nbytes(self) -> int:
         return int(sum(v.nbytes for v in self.inputs.values()))

@@ -70,12 +70,21 @@ class StageCtx:
     array.  `params` holds the current runtime parameter bindings (used as
     concrete values in the collection walk and registered as scalar inputs
     `param/<name>` so re-binding never re-stages).
+
+    `batched` marks the vmapped traced walk of `CompiledQuery.run_many`:
+    the staged program's `param/<name>` inputs are *leading-axis vectors*
+    of shape (B,) — one slot per concurrent binding — and `jax.vmap`
+    splits that axis before operators run, so inside the walk every param
+    is still the scalar the operator code expects (base columns are
+    broadcast, `in_axes=None`).  The flag exists to make that axes
+    contract checkable at the only point where params enter the program.
     """
     db: Any
     settings: Any
     backend: Any
     input: Callable[[str, Callable], Any]
     params: dict = dataclasses.field(default_factory=dict)
+    batched: bool = False
 
     @property
     def xp(self):
@@ -95,9 +104,18 @@ class StageCtx:
                             "compile time (it has no runtime representation)")
         if p.name not in self.params:
             raise KeyError(f"unbound query parameter {p.name!r}")
-        return self.input(
+        v = self.input(
             f"param/{p.name}",
             lambda: np.asarray(self.params[p.name], dtype=p.dtype))
+        # axes contract: operators always see a scalar.  In the batched
+        # walk the (B,) leading axis was split off by vmap before we got
+        # here; a non-scalar value means a caller bound a vector where the
+        # program expects one scalar per binding slot.
+        if getattr(v, "ndim", 0) != 0:
+            raise TypeError(
+                f"param/{p.name} must reach operators as a scalar "
+                f"(got shape {v.shape}; batched={self.batched})")
+        return v
 
     def barrier(self, f: Frame) -> Frame:
         """fusion=False: cut the XLA fusion scope at operator boundaries."""

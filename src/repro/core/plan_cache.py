@@ -27,6 +27,7 @@ from __future__ import annotations
 import copy
 import dataclasses
 import threading
+import weakref
 from collections import OrderedDict
 from typing import Optional
 
@@ -43,6 +44,12 @@ class CacheStats:
     misses: int = 0
     compiles: int = 0     # CompiledQuery constructions (stagings + JITs)
     evictions: int = 0
+    # batched execution (`execute_many`): each cache entry carries the
+    # scalar AND the vmapped callable; the vmapped one retraces once per
+    # power-of-two bucket size, and padding fills the bucket by repeating
+    # the last binding.
+    batch_traces: int = 0   # vmapped retraces across all entries
+    padded_slots: int = 0   # pad slots executed (bucket size - batch size)
 
 
 class PlanCache:
@@ -51,6 +58,10 @@ class PlanCache:
         self.max_entries = max_entries
         self.stats = CacheStats()
         self._entries: "OrderedDict[tuple, CompiledQuery]" = OrderedDict()
+        # last-observed n_batch_traces per live entry (weak: evicted
+        # entries must not pin their compiled programs in memory)
+        self._batch_trace_seen: "weakref.WeakKeyDictionary[CompiledQuery, int]" \
+            = weakref.WeakKeyDictionary()
         self._lock = threading.RLock()
 
     # -- keying ----------------------------------------------------------------
@@ -86,8 +97,12 @@ class PlanCache:
             owned = True
         runtime = {n: v for n, v in bindings.items() if n not in baked}
         # dataclass reprs are recursive and deterministic: they canonicalize
-        # the full plan structure including substituted literals.
-        key = (repr(plan), dataclasses.astuple(settings), id(self.db))
+        # the full plan structure including substituted literals.  The db
+        # component is the Database's monotonic fingerprint, NOT id(db):
+        # ids are reused after GC, and a reused address would hand a new
+        # database a stale entry compiled against dead data.
+        key = (repr(plan), dataclasses.astuple(settings),
+               self.db.fingerprint)
         return key, plan, runtime, owned
 
     def key_for(self, plan: ir.Plan, settings: Settings,
@@ -136,6 +151,63 @@ class PlanCache:
                 bindings: Optional[dict] = None, mode: str = "residual"):
         cq, runtime = self.get(plan, settings, bindings, mode)
         return cq.run(runtime)
+
+    # -- batched execution -----------------------------------------------------
+    def run_many(self, cq: CompiledQuery, runtime_list) -> list:
+        """`cq.run_many` with batch accounting: retraces of the vmapped
+        program and pad slots (power-of-two bucket minus batch size) land
+        in `stats.batch_traces` / `stats.padded_slots`.
+
+        Trace accounting uses a per-entry *watermark* (last observed
+        `n_batch_traces`), not a before/after delta: two server threads
+        executing the same entry concurrently would otherwise attribute
+        one retrace to both calls (or neither)."""
+        runtime_list = list(runtime_list)
+        results = cq.run_many(runtime_list)
+        with self._lock:
+            seen = self._batch_trace_seen.get(cq, 0)
+            if cq.n_batch_traces > seen:
+                self.stats.batch_traces += cq.n_batch_traces - seen
+                self._batch_trace_seen[cq] = cq.n_batch_traces
+            if cq.param_spec and runtime_list:
+                self.stats.padded_slots += \
+                    compile_mod.bucket_size(len(runtime_list)) \
+                    - len(runtime_list)
+        return results
+
+    def execute_many(self, plan: ir.Plan, settings: Settings,
+                     bindings_list, mode: str = "residual") -> list:
+        """Execute N bindings of one logical plan, batching every group of
+        bindings that shares a plan key into a single vmapped dispatch.
+
+        Compile-time (string / LIMIT) parameters partition the batch
+        first: bindings that substitute to different plan structures can
+        never share a staged program, so each structural group compiles
+        (or hits) its own entry and runs as its own batch.  Results are
+        returned positionally, matching `bindings_list`."""
+        prepared = [self._prepare(plan, settings, b, mode)
+                    for b in bindings_list]
+        groups: "OrderedDict[tuple, list[int]]" = OrderedDict()
+        for i, (key, _, _, _) in enumerate(prepared):
+            groups.setdefault(key, []).append(i)
+        results: list = [None] * len(prepared)
+        for key, idxs in groups.items():
+            _, plan_i, runtime_i, owned_i = prepared[idxs[0]]
+            cq = self._get_prepared(key, plan_i, runtime_i, owned_i,
+                                    settings)
+            # _get_prepared counted one hit/miss per *group*; the other
+            # members are hits on the same entry.
+            with self._lock:
+                self.stats.hits += len(idxs) - 1
+            if len(idxs) == 1:
+                # singleton group: the warm scalar program beats tracing
+                # a fresh bucket-1 vmapped one
+                results[idxs[0]] = cq.run(runtime_i)
+                continue
+            for i, res in zip(idxs, self.run_many(
+                    cq, [prepared[i][2] for i in idxs])):
+                results[i] = res
+        return results
 
     def __len__(self) -> int:
         with self._lock:

@@ -27,6 +27,7 @@ memory for the Fig-20 experiment.
 """
 from __future__ import annotations
 
+import itertools
 import time
 from typing import Optional
 
@@ -36,9 +37,17 @@ from repro.relational.schema import ColKind
 from repro.relational.table import Table
 from repro.relational.tpch import generate
 
+# Monotonic database identity.  `PlanCache` keys entries by this instead of
+# `id(db)`: CPython reuses object addresses after garbage collection, so an
+# id-based key could silently serve a stale compiled program to a *new*
+# database that happened to land on a dead one's address.  The counter never
+# repeats within a process (itertools.count.__next__ is atomic under the GIL).
+_FINGERPRINTS = itertools.count()
+
 
 class Database:
     def __init__(self, tables: dict[str, Table]):
+        self.fingerprint: int = next(_FINGERPRINTS)
         self.tables = tables
         self._fk_csr: dict[tuple[str, str], tuple[np.ndarray, np.ndarray]] = {}
         self._date_cluster: dict[tuple[str, str], tuple[np.ndarray, np.ndarray]] = {}

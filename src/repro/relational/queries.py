@@ -338,19 +338,109 @@ Q6_DEFAULTS = {"date_lo": days("1994-01-01"), "date_hi": days("1995-01-01"),
                "disc_lo": 0.05, "disc_hi": 0.07, "qty_max": 24.0}
 
 
+def q12_param() -> Plan:
+    """Shipmode strings are compile-time params (the StrIn rewrite needs
+    dictionary codes); the receipt-date window is runtime-bound."""
+    pred = And(And(StrIn("l_shipmode", (Param("mode1", "str"),
+                                        Param("mode2", "str"))),
+                   Cmp("<", col("l_commitdate"), col("l_receiptdate"))),
+               And(Cmp("<", col("l_shipdate"), col("l_commitdate")),
+                   And(Cmp(">=", col("l_receiptdate"),
+                           Param("receipt_lo", "int32")),
+                       Cmp("<", col("l_receiptdate"),
+                           Param("receipt_hi", "int32")))))
+    li = Select(Scan("lineitem"), pred)
+    j = Join(li, Scan("orders"), "l_orderkey", "o_orderkey")
+    urgent = StrIn("o_orderpriority", ("1-URGENT", "2-HIGH"))
+    agg = Agg(j, ["l_shipmode"], [
+        AggSpec("high_line_count", "sum", Where(urgent, lit(1.0), lit(0.0))),
+        AggSpec("low_line_count", "sum", Where(urgent, lit(0.0), lit(1.0))),
+    ])
+    return Sort(agg, [("l_shipmode", True)])
+
+
+Q12_DEFAULTS = {"mode1": "MAIL", "mode2": "SHIP",
+                "receipt_lo": days("1994-01-01"),
+                "receipt_hi": days("1995-01-01")}
+
+
+def q14_param() -> Plan:
+    """Date range over the lineitem/part join as runtime params; the
+    promo prefix is compile-time (StrStartsWith needs the concrete
+    prefix for the dictionary-range rewrite)."""
+    li = Select(Scan("lineitem"),
+                And(Cmp(">=", col("l_shipdate"), Param("ship_lo", "int32")),
+                    Cmp("<", col("l_shipdate"), Param("ship_hi", "int32"))))
+    j = Join(li, Scan("part"), "l_partkey", "p_partkey")
+    rev = _revenue()
+    agg = Agg(j, [], [
+        AggSpec("promo", "sum",
+                Where(StrStartsWith("p_type", Param("promo_prefix", "str")),
+                      rev, lit(0.0))),
+        AggSpec("total", "sum", rev),
+    ])
+    return Project(agg, {"promo_revenue":
+                         Arith("/", Arith("*", lit(100.0), col("promo")),
+                               col("total"))}, keep_input=False)
+
+
+Q14_DEFAULTS = {"ship_lo": days("1995-09-01"), "ship_hi": days("1995-10-01"),
+                "promo_prefix": "PROMO"}
+
+
+def q19_param() -> Plan:
+    """Disjunctive predicate: per-branch quantity windows are runtime
+    params, the three brands compile-time string params."""
+    li = Select(Scan("lineitem"),
+                And(StrIn("l_shipmode", ("AIR", "REG AIR")),
+                    StrEq("l_shipinstruct", "DELIVER IN PERSON")))
+    j = Join(li, Scan("part"), "l_partkey", "p_partkey")
+
+    def qty(lo, hi):
+        return And(Cmp(">=", col("l_quantity"), Param(lo, "float32")),
+                   Cmp("<=", col("l_quantity"), Param(hi, "float32")))
+
+    c1 = And(And(StrEq("p_brand", Param("brand1", "str")),
+                 StrIn("p_container", ("SM CASE", "SM BOX", "SM PACK", "SM PKG"))),
+             And(qty("qty1_lo", "qty1_hi"), _between("p_size", 1, 5)))
+    c2 = And(And(StrEq("p_brand", Param("brand2", "str")),
+                 StrIn("p_container", ("MED BAG", "MED BOX", "MED PKG", "MED PACK"))),
+             And(qty("qty2_lo", "qty2_hi"), _between("p_size", 1, 10)))
+    c3 = And(And(StrEq("p_brand", Param("brand3", "str")),
+                 StrIn("p_container", ("LG CASE", "LG BOX", "LG PACK", "LG PKG"))),
+             And(qty("qty3_lo", "qty3_hi"), _between("p_size", 1, 15)))
+    sel = Select(j, Or(Or(c1, c2), c3))
+    return Agg(sel, [], [AggSpec("revenue", "sum", _revenue())])
+
+
+Q19_DEFAULTS = {"brand1": "Brand#12", "qty1_lo": 1.0, "qty1_hi": 11.0,
+                "brand2": "Brand#23", "qty2_lo": 10.0, "qty2_hi": 20.0,
+                "brand3": "Brand#34", "qty3_lo": 20.0, "qty3_hi": 30.0}
+
+
 # name -> (plan builder, default bindings matching the literal query)
 PARAM_QUERIES: dict[str, tuple] = {
     "q1": (q1_param, Q1_DEFAULTS),
     "q3": (q3_param, Q3_DEFAULTS),
     "q6": (q6_param, Q6_DEFAULTS),
+    "q12": (q12_param, Q12_DEFAULTS),
+    "q14": (q14_param, Q14_DEFAULTS),
+    "q19": (q19_param, Q19_DEFAULTS),
 }
 
 # alternative runtime bindings (overlay on the defaults) used by the cache
 # tests and bench_plan_cache to exercise the re-bind path with a different,
-# non-empty result
+# non-empty result.  Only *runtime* params are overridden: the same plan
+# key (and therefore the same staged program / batch group) must serve
+# both the default and the alternative bindings.
 PARAM_ALT_BINDINGS: dict[str, dict] = {
     "q1": {"shipdate_hi": days("1997-06-30")},
     "q3": {"cutoff": days("1995-06-15")},
     "q6": {"date_lo": days("1995-01-01"), "date_hi": days("1996-01-01"),
            "qty_max": 30.0},
+    "q12": {"receipt_lo": days("1995-01-01"),
+            "receipt_hi": days("1996-01-01")},
+    "q14": {"ship_lo": days("1994-03-01"), "ship_hi": days("1994-06-01")},
+    "q19": {"qty1_lo": 2.0, "qty1_hi": 14.0, "qty2_lo": 8.0,
+            "qty2_hi": 24.0, "qty3_lo": 16.0, "qty3_hi": 34.0},
 }

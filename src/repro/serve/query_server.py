@@ -5,22 +5,31 @@ concurrently, each naming a plan + parameter bindings; execution goes
 through a shared `PlanCache` so only the first request for a plan shape
 pays staging + XLA JIT, and *in-flight* compilations are deduplicated — a
 request arriving while another request is already compiling the same key
-parks on that compilation instead of starting a second one, then executes
-through the (now warm) cache.
+parks on that compilation instead of starting a second one.
 
-Two driving styles, mirroring `batcher.py`'s tick discipline:
+Execution is *coalesced*, mirroring `batcher.py`'s tick discipline:
+requests arriving within one window (`window_s`) that share a plan key
+are grouped into a single batch, executed as ONE vmapped XLA dispatch
+(`CompiledQuery.run_many` via `PlanCache.run_many`), and their results
+scattered back to the per-request futures.  A window flushes when it
+fills (`max_batch`), when its deadline expires (the flusher thread's
+tick), or when `flush()`/`drain()` forces it — `drain` flushes partial
+windows, so no request can hang because traffic stopped mid-tick.
 
-  * `submit()` returns a `concurrent.futures.Future`; a thread pool
-    overlaps compilations and executions (bind+run of distinct compiled
-    queries is embarrassingly parallel on CPU).
-  * `serve_batch()` submits a list of requests and drains — the
-    deterministic form the tests exercise.
+Two driving styles:
+
+  * `submit()` returns a `concurrent.futures.Future`; the flusher groups
+    and a thread pool overlaps compilations and batch executions.
+  * `serve_batch()` submits a list of requests, flushes, and collects in
+    order — the deterministic form the tests exercise.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from concurrent.futures import Future, ThreadPoolExecutor
+import time
+from concurrent.futures import (Future, InvalidStateError,
+                                ThreadPoolExecutor, wait)
 from typing import Callable, Optional
 
 from repro.core import ir
@@ -33,54 +42,112 @@ class ServerStats:
     submitted: int = 0
     completed: int = 0
     errors: int = 0
-    shared_compiles: int = 0   # requests that parked on an in-flight compile
+    shared_compiles: int = 0   # groups that parked on an in-flight compile
+    batches: int = 0           # dispatched groups (including singletons)
+    coalesced: int = 0         # requests that shared a vmapped dispatch
+
+
+@dataclasses.dataclass
+class _Window:
+    """One coalescing window: all pending requests for one plan key."""
+    plan: ir.Plan                    # prepared (structurally bound) plan
+    owned: bool                      # plan is a private copy
+    deadline: float                  # monotonic flush time
+    entries: list = dataclasses.field(default_factory=list)  # (runtime, fut)
 
 
 class QueryServer:
     def __init__(self, db, settings: Optional[Settings] = None, *,
                  cache: Optional[PlanCache] = None, max_workers: int = 4,
-                 compile_hook: Optional[Callable] = None):
+                 compile_hook: Optional[Callable] = None,
+                 window_s: float = 0.0025, max_batch: int = 64):
         self.db = db
         self.settings = settings or preset("opt")
         self.cache = cache or PlanCache(db)
         self.stats = ServerStats()
         self.compile_hook = compile_hook   # test seam: called pre-compile
+        self.window_s = window_s
+        self.max_batch = max_batch
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="query-server")
         self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._windows: dict[tuple, _Window] = {}
         self._inflight: dict[tuple, threading.Event] = {}
         self._futures: list[Future] = []
         self._closed = False
+        self._flusher = threading.Thread(target=self._flush_loop,
+                                         name="query-server-flusher",
+                                         daemon=True)
+        self._flusher.start()
 
     # -- client API -----------------------------------------------------------
     def submit(self, plan: ir.Plan, bindings: Optional[dict] = None,
                mode: str = "residual") -> Future:
         if self._closed:
             raise RuntimeError("server is closed")
-        fut = self._pool.submit(self._handle, plan, bindings, mode)
-        with self._lock:
+        # one canonicalization per request: compile-time params are baked
+        # into the plan here, so the key both dedups compilation and
+        # partitions the coalescing windows by plan structure.
+        key, prepared, runtime, owned = self.cache._prepare(
+            plan, self.settings, bindings, mode)
+        fut: Future = Future()
+        full = None
+        with self._cv:
+            if self._closed:   # re-check under the lock: close() races us
+                raise RuntimeError("server is closed")
             self.stats.submitted += 1
             # completed futures (and their pinned results) don't accumulate
             self._futures = [f for f in self._futures if not f.done()]
             self._futures.append(fut)
+            w = self._windows.get(key)
+            if w is None:
+                w = _Window(prepared, owned,
+                            time.monotonic() + self.window_s)
+                self._windows[key] = w
+            w.entries.append((runtime, fut))
+            if len(w.entries) >= self.max_batch:
+                full = self._windows.pop(key)
+            else:
+                self._cv.notify()
+        if full is not None:
+            self._dispatch(key, full)
         return fut
 
     def serve_batch(self, requests) -> list:
-        """Submit (plan, bindings) pairs together and drain in order."""
+        """Submit (plan, bindings) pairs together, flush, drain in order."""
         futs = [self.submit(plan, bindings) for plan, bindings in requests]
+        self.flush()
         return [f.result() for f in futs]
 
+    def flush(self) -> None:
+        """Dispatch every open window now, full or not (a forced tick)."""
+        with self._cv:
+            popped = list(self._windows.items())
+            self._windows.clear()
+        for key, w in popped:
+            self._dispatch(key, w)
+
     def drain(self) -> None:
-        with self._lock:
+        """Flush partial windows and wait for every outstanding request —
+        traffic stopping mid-tick must never leave a future hanging."""
+        self.flush()
+        with self._cv:
             pending = list(self._futures)
-        for f in pending:
-            f.exception()   # wait; errors surface via the future
-        with self._lock:
+        # wait() tolerates cancelled futures, unlike f.exception(); request
+        # errors stay parked on the futures for their owners to observe.
+        wait(pending)
+        with self._cv:
             self._futures = [f for f in self._futures if not f.done()]
 
     def close(self) -> None:
-        self._closed = True
+        with self._cv:
+            self._closed = True
+        self.drain()
+        with self._cv:
+            self._cv.notify_all()
         self._pool.shutdown(wait=True)
+        self._flusher.join(timeout=5)
 
     def __enter__(self):
         return self
@@ -88,17 +155,76 @@ class QueryServer:
     def __exit__(self, *exc):
         self.close()
 
-    # -- request path ---------------------------------------------------------
-    def _handle(self, plan, bindings, mode):
+    # -- coalescing tick ------------------------------------------------------
+    def _flush_loop(self):
+        """Flusher thread: dispatch each window when its deadline passes
+        (the tick), sleeping until the next deadline otherwise."""
+        while True:
+            popped = []
+            with self._cv:
+                if self._closed and not self._windows:
+                    return
+                now = time.monotonic()
+                due = [k for k, w in self._windows.items()
+                       if w.deadline <= now]
+                for k in due:
+                    popped.append((k, self._windows.pop(k)))
+                if not popped:
+                    nxt = min((w.deadline for w in self._windows.values()),
+                              default=None)
+                    self._cv.wait(None if nxt is None
+                                  else max(0.0, nxt - now))
+                    continue
+            for key, w in popped:
+                self._dispatch(key, w)
+
+    def _dispatch(self, key: tuple, window: _Window) -> None:
         try:
-            # one canonicalization per request: the (key, plan, runtime)
-            # triple feeds dedup, compile, and execute below.
-            key, prepared, runtime, owned = self.cache._prepare(
-                plan, self.settings, bindings, mode)
-            # dedup loop: parked requests re-enter after the owner finishes,
+            self._pool.submit(self._run_group, key, window)
+        except RuntimeError as e:
+            # pool already shut down (a submit raced close()): fail the
+            # window's requests instead of stranding their futures — and
+            # never let the exception kill the flusher thread.
+            with self._lock:
+                self.stats.errors += len(window.entries)
+            self._fail_window(window, e)
+
+    @staticmethod
+    def _complete(fut: Future, result) -> None:
+        """Finish one request future under the executor state protocol.
+
+        These futures are created by `submit()`, not by an executor, so a
+        client `cancel()` leaves them in CANCELLED — a state
+        `concurrent.futures.wait` does NOT count as complete until
+        `set_running_or_notify_cancel()` advances it to
+        CANCELLED_AND_NOTIFIED.  Skipping that call deadlocks `drain()`
+        on any cancelled request."""
+        if fut.set_running_or_notify_cancel():
+            fut.set_result(result)
+
+    @staticmethod
+    def _fail_window(window: _Window, exc: BaseException) -> None:
+        for _, fut in window.entries:
+            # same atomic claim as _complete: a cancel() racing a plain
+            # done()/cancelled() check could make set_exception raise and
+            # strand the rest of the window
+            try:
+                if fut.set_running_or_notify_cancel():
+                    fut.set_exception(exc)
+            except (InvalidStateError, RuntimeError):
+                # already finished or notified: nothing to deliver (CPython
+                # raises plain RuntimeError for that state, not
+                # InvalidStateError)
+                pass
+
+    # -- group execution ------------------------------------------------------
+    def _run_group(self, key, window: _Window):
+        try:
+            # dedup loop: parked groups re-enter after the owner finishes,
             # so if the owner's compilation *failed* (cache still cold) one
-            # waiter becomes the new owner instead of every waiter compiling
-            # at once.
+            # waiter becomes the new owner instead of every waiter
+            # compiling at once.
+            first_runtime = window.entries[0][0]
             cq = None
             while cq is None:
                 owner, event = False, None
@@ -114,8 +240,9 @@ class QueryServer:
                     try:
                         if self.compile_hook is not None:
                             self.compile_hook(key)
-                        cq = self.cache._get_prepared(key, prepared, runtime,
-                                                      owned, self.settings)
+                        cq = self.cache._get_prepared(
+                            key, window.plan, first_runtime, window.owned,
+                            self.settings)
                     finally:
                         with self._lock:
                             self._inflight.pop(key, None)
@@ -123,13 +250,25 @@ class QueryServer:
                 elif event is not None:
                     event.wait()   # then re-check: hit, or take ownership
                 else:
-                    cq = self.cache._get_prepared(key, prepared, runtime,
-                                                  owned, self.settings)
-            result = cq.run(runtime)
+                    cq = self.cache._get_prepared(
+                        key, window.plan, first_runtime, window.owned,
+                        self.settings)
+            runtimes = [r for r, _ in window.entries]
+            if len(runtimes) == 1:
+                results = [cq.run(runtimes[0])]
+            else:
+                # one vmapped XLA dispatch for the whole group
+                results = self.cache.run_many(cq, runtimes)
             with self._lock:
-                self.stats.completed += 1
-            return result
-        except BaseException:
+                self.stats.completed += len(results)
+                self.stats.batches += 1
+                if len(results) > 1:
+                    self.stats.coalesced += len(results)
+            for (_, fut), res in zip(window.entries, results):
+                # a client may have cancelled its future while the window
+                # was pending; that must not poison the rest of the group
+                self._complete(fut, res)
+        except BaseException as e:
             with self._lock:
-                self.stats.errors += 1
-            raise
+                self.stats.errors += len(window.entries)
+            self._fail_window(window, e)

@@ -1,0 +1,210 @@
+"""Vectorized bind-many execution: `CompiledQuery.run_many` (one vmapped
+XLA dispatch for N bindings), `PlanCache.execute_many` (plan-key
+partitioning + bucket-padding accounting), and the QueryServer's
+coalescing window."""
+import numpy as np
+import pytest
+
+from repro.core import PlanCache, VolcanoEngine, preset
+from repro.core import compile as compile_mod
+from repro.core.compile import bucket_size
+from repro.relational.queries import (PARAM_ALT_BINDINGS as ALT_BINDINGS,
+                                      PARAM_QUERIES)
+from repro.relational.schema import days
+from repro.serve.query_server import QueryServer
+from test_queries import assert_same
+
+
+def q6_bindings(n):
+    """n distinct q6 bindings (vary the quantity cutoff)."""
+    _, defaults = PARAM_QUERIES["q6"]
+    return [dict(defaults, qty_max=10.0 + 0.35 * i) for i in range(n)]
+
+
+def assert_identical(got: dict, want: dict):
+    """Bit-for-bit: batched and scalar paths run the same staged program,
+    so even float results must agree exactly."""
+    assert set(got) == set(want)
+    for k in got:
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# acceptance criterion: 64 bindings of q6 -> ONE XLA execution, results
+# matching 64 sequential run() calls bit-for-bit and the Volcano oracle.
+# ---------------------------------------------------------------------------
+
+def test_run_many_64_single_dispatch_matches_sequential_and_oracle(db):
+    build, defaults = PARAM_QUERIES["q6"]
+    cache = PlanCache(db)
+    cq, _ = cache.get(build(), preset("opt"), defaults)
+    cq.run_many(q6_bindings(64))          # warm: traces bucket 64 once
+
+    bindings = [dict(b, qty_max=b["qty_max"] + 0.1) for b in q6_bindings(64)]
+    stagings = compile_mod.STAGINGS
+    traces, execs = cq.n_batch_traces, cq.n_executions
+    batched = cq.run_many(bindings)
+    assert cq.n_executions - execs == 1, "64 bindings must be ONE dispatch"
+    assert cq.n_batch_traces - traces == 0, "warm bucket must not retrace"
+    assert compile_mod.STAGINGS - stagings == 0, "run_many must not re-stage"
+
+    sequential = [cq.run(b) for b in bindings]
+    oracle = VolcanoEngine(db)
+    for b, got, want in zip(bindings, batched, sequential):
+        assert_identical(got, want)
+        assert_same(got, oracle.execute(build(), b), sort_insensitive=False)
+
+
+@pytest.mark.parametrize("qname", sorted(PARAM_QUERIES))
+def test_run_many_matches_sequential_all_param_queries(db, qname):
+    """Every parameterized workload (incl. the new q12/q14/q19 classes)
+    produces identical results batched vs scalar."""
+    build, defaults = PARAM_QUERIES[qname]
+    cache = PlanCache(db)
+    cq, runtime = cache.get(build(), preset("opt"), defaults)
+    alt = {k: v for k, v in ALT_BINDINGS[qname].items() if k in runtime}
+    bindings = [runtime, dict(runtime, **alt), runtime]
+    for got, want in zip(cq.run_many(bindings),
+                         [cq.run(b) for b in bindings]):
+        assert_identical(got, want)
+
+
+def test_bucket_padding_bounds_retraces(db):
+    """Batch sizes are padded to power-of-two buckets: 5 and 6 share the
+    8-bucket (one trace), 9 opens the 16-bucket."""
+    assert [bucket_size(n) for n in (1, 2, 3, 5, 8, 9, 64, 65)] == \
+        [1, 2, 4, 8, 8, 16, 64, 128]
+    build, defaults = PARAM_QUERIES["q6"]
+    cache = PlanCache(db)
+    cq, _ = cache.get(build(), preset("opt"), defaults)
+    base = cq.n_batch_traces
+    r5 = cq.run_many(q6_bindings(5))
+    assert len(r5) == 5 and cq.n_batch_traces - base == 1
+    cq.run_many(q6_bindings(6))            # same bucket: no retrace
+    assert cq.n_batch_traces - base == 1
+    cq.run_many(q6_bindings(9))            # next bucket
+    assert cq.n_batch_traces - base == 2
+    # padded slots are sliced off: batch 5 results equal scalar runs
+    for got, want in zip(r5, [cq.run(b) for b in q6_bindings(5)]):
+        assert_identical(got, want)
+
+
+def test_execute_many_partitions_by_plan_key(db):
+    """Compile-time params split the batch: q3 with two distinct LIMIT
+    values runs as two groups against two cache entries, and results come
+    back positionally."""
+    build, defaults = PARAM_QUERIES["q3"]
+    cache = PlanCache(db)
+    reqs = [dict(defaults),
+            dict(defaults, topn=5),
+            dict(defaults, cutoff=days("1995-06-15")),   # same key as [0]
+            dict(defaults, topn=5, cutoff=days("1995-06-15"))]
+    results = cache.execute_many(build(), preset("opt"), reqs)
+    assert cache.stats.compiles == 2       # one per LIMIT value
+    assert cache.stats.batch_traces == 2   # one vmapped trace per group
+    # groups of 2 pad to bucket 2: no padded slots here
+    assert cache.stats.padded_slots == 0
+    for req, got in zip(reqs, results):
+        assert len(next(iter(got.values()))) == req["topn"]
+        assert_same(got, VolcanoEngine(db).execute(build(), req),
+                    sort_insensitive=True)
+
+
+def test_execute_many_padding_accounting(db):
+    build, defaults = PARAM_QUERIES["q6"]
+    cache = PlanCache(db)
+    cache.execute_many(build(), preset("opt"), q6_bindings(5))
+    assert cache.stats.padded_slots == 3   # bucket 8 - batch 5
+    assert cache.stats.batch_traces == 1
+
+
+# ---------------------------------------------------------------------------
+# server coalescing window
+# ---------------------------------------------------------------------------
+
+def test_server_coalesces_same_key_requests_into_one_dispatch(db):
+    """64 concurrent q6 requests inside one window -> one group, one
+    vmapped XLA execution, results scattered back per request."""
+    build, _ = PARAM_QUERIES["q6"]
+    bindings = q6_bindings(64)
+    with QueryServer(db, preset("opt"), window_s=30.0,
+                     max_batch=128) as srv:
+        futs = [srv.submit(build(), b) for b in bindings]
+        srv.drain()                       # flushes the partial window
+        results = [f.result(timeout=60) for f in futs]
+        assert srv.stats.batches == 1
+        assert srv.stats.coalesced == 64
+        assert srv.stats.completed == 64 and srv.stats.errors == 0
+        assert srv.cache.stats.compiles == 1
+        cq, _ = srv.cache.get(build(), preset("opt"), bindings[0])
+        assert cq.n_executions == 1, "the whole window must be ONE dispatch"
+    oracle = VolcanoEngine(db)
+    for b, got in zip(bindings, results):
+        assert_same(got, oracle.execute(build(), b), sort_insensitive=False)
+
+
+def test_server_windows_partition_by_plan_key(db):
+    """Requests for different plan keys never share a window: q6 and the
+    two structural variants of q3 form three batches."""
+    b6, d6 = PARAM_QUERIES["q6"]
+    b3, d3 = PARAM_QUERIES["q3"]
+    reqs = [(b6(), dict(d6)),
+            (b3(), dict(d3)),
+            (b6(), dict(d6, qty_max=30.0)),
+            (b3(), dict(d3, topn=5)),
+            (b6(), dict(d6, qty_max=35.0))]
+    with QueryServer(db, preset("opt"), window_s=30.0) as srv:
+        results = srv.serve_batch(reqs)
+        assert srv.stats.batches == 3
+        assert srv.stats.coalesced == 3    # the three q6 riders
+        assert srv.cache.stats.compiles == 3
+    oracle = VolcanoEngine(db)
+    for (plan, bindings), got in zip(reqs, results):
+        assert_same(got, oracle.execute(plan, bindings),
+                    sort_insensitive=True)
+
+
+def test_server_drain_flushes_partial_window(db):
+    """Satellite: traffic stopping mid-tick must not strand requests — a
+    window far from full (and with an hour-long deadline) completes as
+    soon as drain() is called."""
+    build, defaults = PARAM_QUERIES["q6"]
+    with QueryServer(db, preset("opt"), window_s=3600.0,
+                     max_batch=64) as srv:
+        futs = [srv.submit(build(), b) for b in q6_bindings(3)]
+        assert not any(f.done() for f in futs)
+        srv.drain()
+        assert all(f.done() for f in futs)
+        assert srv.stats.completed == 3 and srv.stats.errors == 0
+        assert srv.stats.batches == 1
+
+
+def test_server_cancelled_request_does_not_poison_window_or_drain(db):
+    """Regression: a client cancelling its future mid-window must neither
+    fail the rest of the group nor deadlock drain() (plain-CANCELLED
+    futures don't count as complete for concurrent.futures.wait until
+    notified via the executor protocol)."""
+    build, defaults = PARAM_QUERIES["q6"]
+    with QueryServer(db, preset("opt"), window_s=3600.0,
+                     max_batch=64) as srv:
+        futs = [srv.submit(build(), b) for b in q6_bindings(5)]
+        assert futs[2].cancel()
+        srv.drain()
+        assert all(f.done() for f in futs)
+        assert srv.stats.errors == 0
+        others = [f.result(timeout=60) for i, f in enumerate(futs) if i != 2]
+        assert len(others) == 4
+        want = VolcanoEngine(db).execute(build(), q6_bindings(5)[0])
+        assert_same(others[0], want, sort_insensitive=False)
+
+
+def test_server_full_window_dispatches_without_tick(db):
+    """A window hitting max_batch flushes immediately even though its
+    deadline is far away."""
+    build, _ = PARAM_QUERIES["q6"]
+    with QueryServer(db, preset("opt"), window_s=3600.0,
+                     max_batch=4) as srv:
+        futs = [srv.submit(build(), b) for b in q6_bindings(4)]
+        results = [f.result(timeout=120) for f in futs]
+        assert len(results) == 4
+        assert srv.stats.batches == 1 and srv.stats.coalesced == 4

@@ -109,6 +109,59 @@ def test_cache_eviction_accounting(db):
     assert len(cache) == 1
 
 
+def test_cache_lru_eviction_order_and_recompile(db):
+    """max_entries overflow evicts the *least recently used* entry (a
+    fresh hit protects an old entry), stats stay consistent, and
+    re-inserting the evicted key recompiles exactly once."""
+    build, defaults = PARAM_QUERIES["q6"]
+    cache = PlanCache(db, max_entries=2)
+    s_opt, s_tpch, s_naive = preset("opt"), preset("tpch"), preset("naive")
+    cache.execute(build(), s_opt, defaults)
+    cache.execute(build(), s_tpch, defaults)
+    cache.execute(build(), s_opt, defaults)      # hit: opt becomes MRU
+    cache.execute(build(), s_naive, defaults)    # evicts LRU = tpch
+    assert cache.stats.evictions == 1 and len(cache) == 2
+    assert cache.contains(cache.key_for(build(), s_opt, defaults))
+    assert cache.contains(cache.key_for(build(), s_naive, defaults))
+    assert not cache.contains(cache.key_for(build(), s_tpch, defaults))
+    # stats stay consistent: every execute was one hit or one miss
+    assert cache.stats.hits + cache.stats.misses == 4
+    assert cache.stats.compiles == cache.stats.misses == 3
+    # re-insert recompiles exactly once, then hits again
+    before = compile_mod.STAGINGS
+    cache.execute(build(), s_tpch, defaults)
+    cache.execute(build(), s_tpch, defaults)
+    assert cache.stats.compiles == 4
+    assert compile_mod.STAGINGS - before == 1
+
+
+def test_db_identity_uses_fingerprint_not_id(db):
+    """Regression: keying on id(db) can alias a *new* database onto a
+    dead one's cache entries once the allocator reuses the address.  The
+    monotonic fingerprint never repeats within a process."""
+    import gc
+
+    from repro.relational import Database
+    from repro.relational.queries import QUERIES
+
+    d1 = Database({})
+    f1 = d1.fingerprint
+    k1 = PlanCache(d1).key_for(QUERIES["q6"](), preset("opt"))
+    del d1
+    gc.collect()
+    seen = set()
+    for _ in range(20):
+        d = Database({})      # may well land on d1's freed address
+        assert d.fingerprint != f1
+        seen.add(d.fingerprint)
+        assert PlanCache(d).key_for(QUERIES["q6"](), preset("opt")) != k1
+        del d
+        gc.collect()
+    assert len(seen) == 20, "fingerprints must be unique across databases"
+    key = PlanCache(db).key_for(QUERIES["q6"](), preset("opt"))
+    assert key[2] == db.fingerprint
+
+
 # ---------------------------------------------------------------------------
 # query server
 # ---------------------------------------------------------------------------
