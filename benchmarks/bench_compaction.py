@@ -1,0 +1,125 @@
+"""Selection-vector compaction: mask-only vs compacted latency.
+
+The mask-carrying execution model pays full-table cost downstream of every
+predicate; the Compaction pass (passes/compaction.py) gathers the valid
+rows into statically-capacitied dense frames so joins, aggregations and
+sorts run over the surviving cardinality instead.  For each selective
+query, time the steady-state jitted execution under preset("opt") with
+`Settings.compaction` off (mask-only) and on (compacted), verify zero
+result drift against the Volcano oracle either way, and record the planted
+capacity buckets plus any runtime overflows (an overflowing run falls back
+to the uncompacted twin, so a non-zero overflow count means the speedup
+column is measuring the fallback, not compaction).
+
+Writes `BENCH_compaction.json` (or $REPRO_BENCH_COMPACT_OUT).  The scale
+factor is serving-sized (REPRO_COMPACT_SF, default 0.01), matching the
+plan-cache / batched-bindings benches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CompiledQuery, VolcanoEngine, preset
+from repro.core import ir
+from repro.relational import Database
+from repro.relational.queries import QUERIES
+
+from benchmarks.common import REPEATS
+
+SF = float(os.environ.get("REPRO_COMPACT_SF", "0.01"))
+
+# the selective-query slice of the workload: every query whose predicates
+# leave a small fraction of a large frame alive (the q6/q19 class)
+SELECTIVE = ["q3", "q5", "q6", "q7", "q10", "q12", "q17", "q19"]
+
+
+def _time(cq: CompiledQuery) -> float:
+    import jax
+
+    out = cq._jitted(cq.inputs)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(max(5, REPEATS)):
+        t0 = time.perf_counter()
+        out = cq._jitted(cq.inputs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def _drift(a: dict, b: dict) -> float:
+    worst = 0.0
+    for k in a:
+        va, vb = np.asarray(a[k]), np.asarray(b[k])
+        if va.shape != vb.shape:
+            return float("inf")
+        if va.dtype.kind in "fc" or vb.dtype.kind in "fc":
+            va64 = np.sort(va.astype(np.float64))
+            vb64 = np.sort(vb.astype(np.float64))
+            scale = np.maximum(np.abs(vb64), 1.0)
+            worst = max(worst, float(np.max(np.abs(va64 - vb64) / scale,
+                                            initial=0.0)))
+        elif not np.array_equal(np.sort(va, axis=0), np.sort(vb, axis=0)):
+            return float("inf")
+    return worst
+
+
+def run(out=print) -> dict:
+    database = Database.tpch(sf=SF, seed=0)
+    oracle = VolcanoEngine(database)
+    s_on = preset("opt")
+    s_off = dataclasses.replace(s_on, compaction=False)
+    results: dict = {"sf": SF, "queries": {}}
+
+    for qname in SELECTIVE:
+        cq_on = CompiledQuery(QUERIES[qname](), database, s_on)
+        cq_off = CompiledQuery(QUERIES[qname](), database, s_off)
+        caps = list(cq_on.capacities)
+        if not caps:
+            out(f"compaction/{qname}/no_points,0.0,skipped")
+            results["queries"][qname] = {"capacities": []}
+            continue
+        want = oracle.execute(QUERIES[qname]())
+        drift_on = _drift(cq_on.run(), want)
+        drift_off = _drift(cq_off.run(), want)
+        t_on = _time(cq_on)
+        t_off = _time(cq_off)
+        speedup = t_off / max(t_on, 1e-12)
+        results["queries"][qname] = {
+            "capacities": caps,
+            "mask_only_s": t_off,
+            "compacted_s": t_on,
+            "speedup": speedup,
+            "overflows": cq_on.n_overflows,
+            "max_rel_drift_vs_oracle": max(drift_on, drift_off),
+        }
+        out(f"compaction/{qname}/mask_only,{t_off * 1e6:.1f},us")
+        out(f"compaction/{qname}/compacted,{t_on * 1e6:.1f},"
+            f"{speedup:.2f}x caps={caps} overflows={cq_on.n_overflows}")
+
+    measured = [r for r in results["queries"].values() if "speedup" in r]
+    results["summary"] = {
+        "n_measured": len(measured),
+        "n_speedup_ge_3x": sum(r["speedup"] >= 3.0 for r in measured),
+        "n_overflowed": sum(r["overflows"] > 0 for r in measured),
+        "max_drift": max((r["max_rel_drift_vs_oracle"] for r in measured),
+                         default=0.0),
+    }
+    path = os.environ.get("REPRO_BENCH_COMPACT_OUT", "BENCH_compaction.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    out(f"wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    res = run()
+    # correctness is the only hard gate: wall-clock speedups on shared CI
+    # runners are advisory (the JSON records them for the nightly artifact)
+    sys.exit(0 if res["summary"]["max_drift"] < 1e-2 else 1)

@@ -11,9 +11,9 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_ablation, bench_batched_bindings,
-                            bench_compile, bench_kernels, bench_ladder,
-                            bench_loading, bench_memory, bench_plan_cache,
-                            bench_roofline)
+                            bench_compaction, bench_compile, bench_kernels,
+                            bench_ladder, bench_loading, bench_memory,
+                            bench_plan_cache, bench_roofline)
 
     quick = os.environ.get("REPRO_QUICK") == "1"
     print("name,us_per_call,derived")
@@ -23,6 +23,7 @@ def main() -> None:
     bench_compile.run()
     bench_plan_cache.run()
     bench_batched_bindings.run()
+    bench_compaction.run()
     if quick:
         import benchmarks.common as C
         from repro.relational import queries as Q

@@ -41,6 +41,19 @@ class NumpyBackend:
         return np.lexsort(tuple(keys))
 
     @staticmethod
+    def compact(mask, capacity):
+        """(idx int32[capacity], count int32): row ids of the mask's valid
+        rows, in order, zero-padded past `count`.  `count` may exceed
+        `capacity` (the caller's overflow signal); the surplus rows are
+        dropped from idx."""
+        valid = np.flatnonzero(mask).astype(np.int32)
+        count = np.int32(valid.size)
+        idx = np.zeros((capacity,), dtype=np.int32)
+        k = min(capacity, valid.size)
+        idx[:k] = valid[:k]
+        return idx, count
+
+    @staticmethod
     def barrier(x):
         return x
 
@@ -91,6 +104,28 @@ class JaxBackend:
         import jax.numpy as jnp
 
         return jnp.lexsort(tuple(keys))
+
+    def compact(self, mask, capacity):
+        """Cumsum + binary-search compaction (vmap-safe, static shapes).
+
+        `cumsum(mask)` is non-decreasing, so the row id of the j-th valid
+        row is the first position where the running count reaches j+1 — a
+        vectorized `searchsorted` over the `capacity` output slots.  This
+        is a pure gather formulation: XLA's CPU scatter executes updates
+        serially (~100x slower than the rest of the pipeline combined),
+        while cumsum + batched binary search stay vectorized.  Slots past
+        the valid count search past the end and clamp to n-1; the caller's
+        pad mask (`arange(capacity) < count`) hides them, and
+        `count > capacity` is the overflow flag.
+        """
+        import jax.numpy as jnp
+
+        c = jnp.cumsum(mask.astype(jnp.int32))
+        count = c[-1]
+        idx = jnp.searchsorted(
+            c, jnp.arange(1, capacity + 1, dtype=jnp.int32))
+        n = mask.shape[0]
+        return jnp.clip(idx, 0, n - 1).astype(jnp.int32), count
 
     def barrier(self, x):
         import jax

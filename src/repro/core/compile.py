@@ -33,9 +33,18 @@ costs at most log2(max batch) retraces of the vmapped program.
 With `Settings.fusion = False` an `optimization_barrier` is placed between
 operator regions, reproducing the limited optimization scope of
 template-expansion query compilers (paper Fig 2) for the ladder experiment.
+
+Selection-vector compaction (passes/compaction.py) gives the staged program
+a third output: the OR of every compaction point's runtime overflow flag.
+When it fires, the planner's static capacity buckets dropped rows, so
+`run`/`run_many` discard the outputs and re-execute through the lazily
+compiled *uncompacted twin* of the same logical plan — compaction is a
+performance bet whose worst case is latency, never wrong results.
 """
 from __future__ import annotations
 
+import copy
+import dataclasses
 import threading
 import time
 from typing import Optional
@@ -86,9 +95,27 @@ class CompiledQuery:
 
         self.db = db
         self.settings = settings
+        # compaction plants static-capacity points from cardinality
+        # *estimates*; keep a pristine copy of the logical plan so an
+        # estimate that undershoots at runtime (the overflow flag) can
+        # compile the uncompacted twin lazily.  Hand-planted Compact nodes
+        # can overflow even with the pass off, so the copy is gated on
+        # either — only plans that provably stay uncompacted skip it.
+        pristine = copy.deepcopy(plan) \
+            if settings.compaction or any(isinstance(n, ir.Compact)
+                                          for n in ir.walk(plan)) else None
         t0 = time.perf_counter()
         self.plan = optimize(plan, db, settings)
         self.pass_time = time.perf_counter() - t0
+        self.compaction_points = sum(
+            1 for n in ir.walk(self.plan) if isinstance(n, ir.Compact))
+        self.capacities = tuple(
+            n.capacity for n in ir.walk(self.plan)
+            if isinstance(n, ir.Compact))
+        self._pristine = pristine if self.compaction_points else None
+        self._fallback: Optional["CompiledQuery"] = None
+        self._fallback_lock = threading.Lock()
+        self.n_overflows = 0      # executions (or batch slots) that fell back
 
         spec = plan_params(self.plan)
         structural = sorted(n for n, i in spec.items() if i.structural)
@@ -142,7 +169,12 @@ class CompiledQuery:
             n = frame_nrows(frame)
             mask = frame.mask if frame.mask is not None \
                 else ctx.xp.ones((n,), dtype=bool)
-            return out, mask
+            # third program output: OR of every compaction point's
+            # overflow flag (constant False when the plan has none)
+            oflow = ctx.xp.zeros((), dtype=bool)
+            for f in ctx.overflow:
+                oflow = oflow | f
+            return out, mask, oflow
 
         def fn(inputs):
             self.n_traces += 1   # host side effect: runs only while tracing
@@ -226,11 +258,32 @@ class CompiledQuery:
                 [np.asarray(b[name], dtype=dtype) for b in merged])
         return inputs
 
+    def _fallback_query(self) -> "CompiledQuery":
+        """The uncompacted twin: same logical plan, compaction off.
+        Compiled lazily on the first overflow, at most once."""
+        from repro.core.passes.compaction import strip_compaction
+
+        with self._fallback_lock:
+            if self._fallback is None:
+                # hand-planted Compact nodes survive pass-disabling: strip
+                # them too, or the twin would overflow all over again
+                self._fallback = CompiledQuery(
+                    strip_compaction(self._pristine), self.db,
+                    dataclasses.replace(self.settings, compaction=False),
+                    params=self.param_defaults)
+                self._pristine = None   # handed over (passes mutated it)
+            return self._fallback
+
     def run(self, params: Optional[dict] = None) -> dict[str, np.ndarray]:
         import jax
 
         self.n_executions += 1
-        out, mask = self._jitted(self.bind(params))
+        out, mask, oflow = self._jitted(self.bind(params))
+        if self.compaction_points and bool(np.asarray(oflow)):
+            # a capacity bucket overflowed: the compacted frames dropped
+            # rows, so the outputs are unusable — re-execute uncompacted
+            self.n_overflows += 1
+            return self._fallback_query().run(params)
         out = jax.tree.map(np.asarray, out)
         mask = np.asarray(mask)
         return self._decode(out, mask)
@@ -256,11 +309,23 @@ class CompiledQuery:
         import jax
 
         self.n_executions += 1
-        out, mask = self._jitted_many(self.bind_many(bindings_list))
+        out, mask, oflow = self._jitted_many(self.bind_many(bindings_list))
         out = jax.tree.map(np.asarray, out)
         mask = np.asarray(mask)
-        return [self._decode({k: v[i] for k, v in out.items()}, mask[i])
-                for i in range(len(bindings_list))]
+        oflow = np.asarray(oflow)
+        results = [self._decode({k: v[i] for k, v in out.items()}, mask[i])
+                   if not (self.compaction_points and oflow[i]) else None
+                   for i in range(len(bindings_list))]
+        bad = [i for i, r in enumerate(results) if r is None]
+        if bad:
+            # per-slot overflow: only the overflowing bindings re-execute
+            # through the uncompacted twin (itself one vmapped dispatch)
+            self.n_overflows += len(bad)
+            redo = self._fallback_query().run_many(
+                [bindings_list[i] for i in bad])
+            for i, r in zip(bad, redo):
+                results[i] = r
+        return results
 
     def input_nbytes(self) -> int:
         return int(sum(v.nbytes for v in self.inputs.values()))
@@ -327,7 +392,14 @@ class CompiledQueryBatch:
 
         outs = self._jitted(self.inputs)
         results = []
-        for q, (out, mask) in zip(self.queries, outs):
+        for q, (out, mask, oflow) in zip(self.queries, outs):
+            if q.compaction_points and bool(np.asarray(oflow)):
+                # rare: that query's capacity overflowed — go straight to
+                # its uncompacted twin (q.run() would re-execute the
+                # compacted program only to watch it overflow again)
+                q.n_overflows += 1
+                results.append(q._fallback_query().run())
+                continue
             out = jax.tree.map(np.asarray, out)
             results.append(_decode_frame(out, np.asarray(mask), q.out_meta))
         return results

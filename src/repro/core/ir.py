@@ -92,6 +92,26 @@ class Agg:
 
 
 @dataclasses.dataclass
+class Compact:
+    """Selection-vector compaction (paper §3.2 data-structure
+    specialization, XLA-native form): gather the child's mask-valid rows
+    into a dense frame of statically planned `capacity` rows.
+
+    Inserted by the Compaction pass after selective operators and before
+    expensive consumers, so downstream sorts/gathers/aggregations run over
+    `capacity` rows instead of the child's full cardinality.  JAX's
+    static-shape constraint makes `capacity` a compile-time constant
+    (a power-of-two bucket over the estimated valid-row count); if more
+    rows survive at runtime than the planner estimated, the staged
+    program's overflow flag fires and the runtime re-executes the
+    uncompacted twin plan (CompiledQuery's fallback) — compaction is a
+    performance contract, never a correctness one.
+    """
+    child: "Plan"
+    capacity: int
+
+
+@dataclasses.dataclass
 class Sort:
     child: "Plan"
     keys: list[tuple[str, bool]]  # (col, ascending)
@@ -105,7 +125,7 @@ class Limit:
     n: "int | object"
 
 
-Plan = Scan | Select | Project | Join | Agg | Sort | Limit
+Plan = Scan | Select | Project | Join | Agg | Compact | Sort | Limit
 
 
 def children(p: Plan) -> list[Plan]:
@@ -150,6 +170,8 @@ def plan_repr(p: Plan, indent: int = 0) -> str:
     if isinstance(p, Agg):
         return (f"{pad}Agg[{p.strategy}](by={p.group_by}, "
                 f"aggs={[a.name for a in p.aggs]})\n{plan_repr(p.child, indent + 1)}")
+    if isinstance(p, Compact):
+        return f"{pad}Compact(cap={p.capacity})\n{plan_repr(p.child, indent + 1)}"
     if isinstance(p, Sort):
         return f"{pad}Sort({p.keys})\n{plan_repr(p.child, indent + 1)}"
     if isinstance(p, Limit):

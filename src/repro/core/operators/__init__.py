@@ -6,8 +6,8 @@ twice (numpy collection walk, traced JAX walk) and wraps the result in a
 from __future__ import annotations
 
 from repro.core import ir
-from repro.core.operators import (agg, join, limit, project, scan, select,
-                                  sort)
+from repro.core.operators import (agg, compact, join, limit, project, scan,
+                                  select, sort)
 from repro.core.operators.base import (Binding, Frame, FrameEnv, StageCtx,
                                        frame_nrows)
 
@@ -17,6 +17,7 @@ _DISPATCH = {
     ir.Project: project.stage,
     ir.Join: join.stage,
     ir.Agg: agg.stage,
+    ir.Compact: compact.stage,
     ir.Sort: sort.stage,
     ir.Limit: limit.stage,
 }

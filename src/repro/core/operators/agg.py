@@ -56,7 +56,8 @@ def stage(a: ir.Agg, ctx: StageCtx, defer: bool = False) -> Frame:
             names = [s_.name for s_ in a.aggs if s_.expr is not None]
             sums_m, cnt = kops.filter_agg_query(
                 mask, xp.zeros((n,), dtype=np.int32),
-                [vals[nm].astype(np.float32) for nm in names], 1)
+                [vals[nm].astype(np.float32) for nm in names], 1,
+                interpret=ctx.settings.pallas_interpret)
             cols = {}
             for spec in a.aggs:
                 if spec.fn == "sum":
@@ -107,7 +108,8 @@ def stage(a: ir.Agg, ctx: StageCtx, defer: bool = False) -> Frame:
 
             names = [s_.name for s_ in a.aggs if s_.expr is not None]
             sums_m, cnt = kops.filter_agg_query(
-                mask, idx, [vals[nm].astype(np.float32) for nm in names], D)
+                mask, idx, [vals[nm].astype(np.float32) for nm in names], D,
+                interpret=ctx.settings.pallas_interpret)
             kernel_sums = {nm: sums_m[:, i] for i, nm in enumerate(names)}
             kernel_counts = cnt
             present = (cnt > 0).astype(np.int32)

@@ -38,9 +38,15 @@ class Frame:
     cols: dict[str, Binding]
     mask: Any = None              # bool array or None (all valid)
     pending: list = dataclasses.field(default_factory=list)
+    # set by the Compact operator: this frame's physical row count is a
+    # planner-assigned compaction capacity (valid rows are dense-packed at
+    # the front; `mask` marks the pad slots).  Purely informational — no
+    # operator branches on it — but tests and debugging read it.
+    capacity: Any = None
 
     def copy(self) -> "Frame":
-        return Frame(dict(self.cols), self.mask, list(self.pending))
+        return Frame(dict(self.cols), self.mask, list(self.pending),
+                     self.capacity)
 
 
 def frame_nrows(f: Frame) -> int:
@@ -85,6 +91,12 @@ class StageCtx:
     input: Callable[[str, Callable], Any]
     params: dict = dataclasses.field(default_factory=dict)
     batched: bool = False
+    # traced per-compaction-point overflow flags (bool scalars), OR-reduced
+    # by the compile driver into the staged program's third output.  A set
+    # flag means more rows survived a predicate than the planner's capacity
+    # bucket holds — the runtime re-executes the uncompacted fallback plan.
+    overflow: list = dataclasses.field(default_factory=list)
+    n_compactions: int = 0        # Compact points actually staged this walk
 
     @property
     def xp(self):
@@ -117,6 +129,12 @@ class StageCtx:
                 f"(got shape {v.shape}; batched={self.batched})")
         return v
 
+    def note_overflow(self, flag) -> None:
+        """Register a compaction point's overflow flag (a backend bool
+        scalar: concrete in the collection walk, traced under jit)."""
+        self.overflow.append(flag)
+        self.n_compactions += 1
+
     def barrier(self, f: Frame) -> Frame:
         """fusion=False: cut the XLA fusion scope at operator boundaries."""
         if self.settings.fusion or self.backend.name == "numpy":
@@ -126,7 +144,7 @@ class StageCtx:
         cols = {n: Binding(wrapped[n], b.kind, b.table, b.col)
                 for n, b in f.cols.items()}
         mask = None if f.mask is None else self.backend.barrier(f.mask)
-        return Frame(cols, mask, f.pending)
+        return Frame(cols, mask, f.pending, f.capacity)
 
 
 class FrameEnv(EvalEnv):

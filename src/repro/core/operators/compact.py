@@ -1,0 +1,43 @@
+"""Compact: selection-vector compaction to a static capacity bucket.
+
+The mask-carrying execution model pays full-table cost in every operator
+downstream of a selective predicate: a 0.2%-selectivity query still
+gathers, sorts and segment-reduces over every row.  `Compact` converts the
+frame to the dense, layout-specialized representation the paper's §3.2
+argues for: `backend.compact(mask, capacity)` ranks the valid rows with a
+cumsum and scatters their ids into an index vector of *statically planned*
+`capacity` (JAX shapes must be static), then every column is gathered down
+to `capacity` rows.  Downstream operators are oblivious — they see an
+ordinary, much smaller Frame whose mask marks only the pad slots.
+
+If more rows survive than the planner estimated, the surplus is dropped
+from the index vector and the point's overflow flag (`count > capacity`)
+is raised through `StageCtx.note_overflow`; the compile driver surfaces it
+as the staged program's third output and `CompiledQuery` re-executes the
+uncompacted fallback plan, so an estimate can only ever cost time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ir
+from repro.core.operators.base import (Binding, Frame, StageCtx, frame_nrows,
+                                       ones_mask)
+
+
+def stage(c: ir.Compact, ctx: StageCtx, defer: bool = False) -> Frame:
+    f = ctx.stage(c.child)
+    be, xp = ctx.backend, ctx.xp
+    n = frame_nrows(f)
+    cap = int(c.capacity)
+    if cap >= n:
+        # nothing to win (also: the 8-row collection walk, where the frame
+        # is a sample slice — schema and input registration are unaffected)
+        return f
+    mask = f.mask if f.mask is not None else ones_mask(xp, n)
+    idx, count = be.compact(mask, cap)
+    ctx.note_overflow(count > cap)
+    cols = {name: Binding(be.take(b.arr, idx), b.kind, b.table, b.col)
+            for name, b in f.cols.items()}
+    newmask = xp.arange(cap, dtype=np.int32) < count
+    return Frame(cols, newmask, f.pending, capacity=cap)

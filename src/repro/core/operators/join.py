@@ -137,11 +137,35 @@ def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
     return ctx.barrier(Frame(cols, mask))
 
 
+def _stats_max(frame: Frame, key: str):
+    b = frame.cols[key]
+    if b.table is not None and b.col in b.table.stats:
+        return int(b.table.stats[b.col].max)
+    return None
+
+
 def _key2_bound(j: ir.Join, stream: Frame, build: Frame) -> np.uint32:
-    """Static bound for the second key (from base-table stats)."""
-    for frame in (build, stream):
-        key = j.build_key2 if frame is build else j.stream_key2
-        b = frame.cols[key]
-        if b.table is not None and b.col in b.table.stats:
-            return np.uint32(int(b.table.stats[b.col].max) + 1)
-    return np.uint32(1 << 20)
+    """Static bound for the second key of a composite-key pack.
+
+    The generic composite join packs `k1 * K2 + k2` into uint32; K2 must
+    exceed *both* sides' k2 values or distinct pairs collide, and the
+    packed value must fit 32 bits or the pack wraps and matches garbage.
+    Both bounds are derived from load-time stats where available and
+    checked at staging time — a silent-overflow pack never compiles.
+    """
+    k2_maxes = [m for m in (_stats_max(build, j.build_key2),
+                            _stats_max(stream, j.stream_key2))
+                if m is not None]
+    K2 = int(max(k2_maxes)) + 1 if k2_maxes else 1 << 20
+    k1_maxes = [m for m in (_stats_max(build, j.build_key),
+                            _stats_max(stream, j.stream_key))
+                if m is not None]
+    if k1_maxes:
+        packed_max = max(k1_maxes) * K2 + (K2 - 1)
+        if packed_max >= 2**32:
+            raise TypeError(
+                f"composite join key ({j.stream_key},{j.stream_key2}) "
+                f"cannot pack into uint32: max_k1={max(k1_maxes)} * "
+                f"K2={K2} + {K2 - 1} = {packed_max} >= 2**32; "
+                "the generic composite strategy needs a wider pack")
+    return np.uint32(K2)

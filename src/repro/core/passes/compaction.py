@@ -1,0 +1,337 @@
+"""Selection-vector compaction (paper §3.2, Fig 7: data-structure
+specialization is where the constant factors live).
+
+The mask-carrying dataflow of the staged engine is shape-stable — exactly
+what XLA wants — but it makes every operator pay full-table cost no matter
+how selective the upstream predicates were.  This pass plants
+`ir.Compact(child, capacity)` points where that cost is worth cutting:
+
+  * **where**: after selective Selects (and the masks PK-gather joins
+    introduce), immediately below expensive consumers — join probes and
+    gathers, aggregations, sorts — so the consumer runs over `capacity`
+    rows instead of the full cardinality.  Build sides of `pk_gather` /
+    `bucket_gather` joins are never compacted: those strategies index the
+    build frame *positionally* (a key value is a row id), and compaction
+    destroys alignment.
+  * **capacity**: JAX shapes are static, so the capacity must be chosen at
+    plan time.  We estimate the surviving-row count from `Table.stats` and
+    predicate structure (range fractions over min/max, equality over known
+    dictionary/key domains — §3.5.2 "statistics knowledge"), multiply by a
+    safety margin, and round up to a power-of-two bucket so near-miss
+    estimates across plans land on few distinct shapes (mirroring the
+    batch buckets of `compile.bucket_size`).
+  * **overflow**: estimates are estimates.  Every Compact point raises a
+    runtime flag when `count > capacity`; the compile driver surfaces the
+    OR of all flags as a program output and `CompiledQuery` re-executes an
+    uncompacted twin plan, so compaction can never change results.
+
+`PlanCache` folds the planted capacity vector (read off the lowered plan)
+into the plan key: entries are distinct whenever their static shapes are,
+so each capacity bucket is traced at most once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import ir
+from repro.core import expr as E
+from repro.relational.loader import Database
+from repro.relational.schema import ColKind
+
+# minimum planned row-count win for a point to pay for the compaction
+# itself (a cumsum pass + binary search plus a gather per carried column)
+_RATIO_SORT = 2
+_RATIO_ELEMENTWISE = 2
+_MIN_CAPACITY = 64
+
+
+@dataclasses.dataclass
+class Card:
+    """Cardinality estimate for a staged frame at one plan point."""
+    phys: int        # physical row count (static, exact)
+    valid: float     # estimated mask-valid rows
+    masked: bool     # frame carries a (possibly selective) mask
+
+
+class Compaction:
+    name = "Compaction"
+
+    def run(self, plan: ir.Plan, db: Database, settings) -> ir.Plan:
+        plan, _ = _walk(plan, db, settings, heavy=False)
+        return plan
+
+
+def strip_compaction(plan: ir.Plan) -> ir.Plan:
+    """Remove every Compact node (planner-inserted or hand-planted) — the
+    uncompacted twin the overflow fallback compiles against."""
+    kids = [strip_compaction(c) for c in ir.children(plan)]
+    ir.replace_children(plan, kids)
+    if isinstance(plan, ir.Compact):
+        return plan.child
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# the annotated walk: bottom-up cardinalities, top-down insertions
+# ---------------------------------------------------------------------------
+
+def _walk(p: ir.Plan, db: Database, s, heavy: bool
+          ) -> tuple[ir.Plan, Card]:
+    """`heavy` marks subtrees consumed (transitively) by an operator whose
+    per-row cost does not fuse away — sorts, segment reductions, generic
+    join probes.  A pure elementwise+gather pipeline ending in a scalar
+    aggregate fuses into a handful of XLA loops already; compacting it
+    trades fused passes for an unfused cumsum and loses."""
+    if isinstance(p, ir.Scan):
+        t = db.table(p.table)
+        n = t.nrows
+        if p.date_slice is not None:
+            ds = p.date_slice
+            _, start, end = db.date_slice(p.table, ds.col, ds.lo, ds.hi)
+            n = max(end - start, 0)
+        return p, Card(n, float(n), False)
+
+    if isinstance(p, ir.Select):
+        child, c = _walk(p.child, db, s, heavy)
+        p.child = child
+        sel = _selectivity(p.pred, p.child, db)
+        return p, Card(c.phys, c.valid * sel, True)
+
+    if isinstance(p, ir.Project):
+        child, c = _walk(p.child, db, s, heavy)
+        p.child = child
+        return p, c
+
+    if isinstance(p, ir.Compact):   # pre-existing (hand-planted) point
+        child, c = _walk(p.child, db, s, heavy)
+        p.child = child
+        cap = int(p.capacity)
+        return p, Card(min(cap, c.phys), min(c.valid, float(cap)), True)
+
+    if isinstance(p, ir.Join):
+        # a generic join is itself a heavy consumer (build argsort, stream
+        # binary-search probe); the positional strategies are gathers that
+        # fuse, so their streams compact only under a heavy ancestor
+        sub_heavy = heavy or p.strategy == "generic"
+        stream, sc = _walk(p.stream, db, s, sub_heavy)
+        build, bc = _walk(p.build, db, s, sub_heavy)
+        # the build's match fraction must reflect its *pre-compaction*
+        # cardinality: compaction shrinks phys toward valid, which would
+        # inflate the fraction to ~1/margin and poison downstream estimates
+        bfrac = min(bc.valid / bc.phys, 1.0) if bc.phys else 1.0
+        if sub_heavy:
+            stream, sc = _maybe_compact(stream, sc, s,
+                                        _RATIO_ELEMENTWISE)
+        # positional strategies index the build by key value: never compact.
+        # The generic join argsorts the build; exists_flag scatters it.
+        if p.strategy in ("generic", "exists_flag"):
+            ratio = _RATIO_SORT if p.strategy == "generic" \
+                else _RATIO_ELEMENTWISE
+            build, bc = _maybe_compact(build, bc, s, ratio)
+        p.stream, p.build = stream, build
+        if p.kind == "inner":
+            valid, masked = sc.valid * bfrac, sc.masked or bc.masked
+        elif p.kind == "left":
+            valid, masked = sc.valid, sc.masked
+        elif p.kind == "semi":
+            valid, masked = sc.valid * bfrac, True
+        else:  # anti
+            valid, masked = sc.valid * max(1.0 - bfrac, 0.1), True
+        return p, Card(sc.phys, valid, masked)
+
+    if isinstance(p, ir.Agg):
+        # dense/generic aggregation segment-reduces (or sorts) per row —
+        # heavy for everything below; a scalar aggregation is a terminal
+        # one-pass consumer that reduces masked rows as cheaply as the
+        # compaction itself would run
+        agg_heavy = p.strategy != "scalar" and bool(p.group_by)
+        child, c = _walk(p.child, db, s, heavy or agg_heavy)
+        if agg_heavy:
+            ratio = _RATIO_SORT if p.strategy == "generic" \
+                else _RATIO_ELEMENTWISE
+            child, c = _maybe_compact(child, c, s, ratio)
+        p.child = child
+        if p.strategy == "dense":
+            D = 1
+            for d in p.domains or [1]:
+                D *= d
+            return p, Card(D, min(float(D), c.valid), True)
+        if p.strategy == "scalar" or not p.group_by:
+            return p, Card(1, 1.0, False)
+        # generic grouping keeps the physical width, groups packed in front
+        return p, Card(c.phys, min(c.valid, float(c.phys)), True)
+
+    if isinstance(p, ir.Sort):
+        child, c = _walk(p.child, db, s, True)
+        child, c = _maybe_compact(child, c, s, _RATIO_SORT)
+        p.child = child
+        return p, c
+
+    if isinstance(p, ir.Limit):
+        child, c = _walk(p.child, db, s, heavy)
+        p.child = child
+        n = p.n if isinstance(p.n, int) else c.phys
+        return p, Card(min(n, c.phys), min(c.valid, float(n)), c.masked)
+
+    raise TypeError(type(p))
+
+
+def _bucket(est_rows: float, margin: float) -> int:
+    want = max(int(est_rows * margin) + 1, _MIN_CAPACITY)
+    return 1 << (want - 1).bit_length()
+
+
+def _maybe_compact(node: ir.Plan, card: Card, s,
+                   ratio: int) -> tuple[ir.Plan, Card]:
+    """Plant a Compact over `node` if the planner expects the consumer to
+    win at least `ratio`x in row count.  Returns the (possibly wrapped)
+    node and the post-compaction cardinality."""
+    if not s.compaction or not card.masked or isinstance(node, ir.Compact):
+        return node, card
+    if card.phys < s.compact_min_rows:
+        return node, card
+    cap = _bucket(card.valid, s.compact_margin)
+    if cap * ratio > card.phys:
+        return node, card
+    return _wrap(node, cap), Card(cap, card.valid, True)
+
+
+def _wrap(node: ir.Plan, cap: int) -> ir.Plan:
+    # sink below Projects so the projection's expressions also run narrow
+    # (a Project is elementwise: compact-then-project == project-then-compact)
+    if isinstance(node, ir.Project):
+        node.child = _wrap(node.child, cap)
+        return node
+    return ir.Compact(node, cap)
+
+
+# ---------------------------------------------------------------------------
+# selectivity estimation from Table.stats + predicate structure
+# ---------------------------------------------------------------------------
+
+def _selectivity(e: E.Expr, plan: ir.Plan, db: Database) -> float:
+    s = _sel(e, plan, db)
+    return min(max(s, 0.0), 1.0)
+
+
+def _sel(e, plan, db) -> float:
+    if isinstance(e, E.And):
+        return _sel(e.lhs, plan, db) * _sel(e.rhs, plan, db)
+    if isinstance(e, E.Or):
+        a, b = _sel(e.lhs, plan, db), _sel(e.rhs, plan, db)
+        return a + b - a * b
+    if isinstance(e, E.Not):
+        return 1.0 - _sel(e.operand, plan, db)
+    if isinstance(e, E.Const):
+        return 1.0 if e.value else 0.0
+
+    if isinstance(e, E.Cmp):
+        lhs, rhs, op = e.lhs, e.rhs, e.op
+        if isinstance(rhs, E.Col) and isinstance(lhs, E.Const):
+            lhs, rhs = rhs, lhs
+            op = {"<": ">", "<=": ">=", ">": "<", ">=": "<="}.get(op, op)
+        if isinstance(lhs, E.Col) and isinstance(rhs, E.Const):
+            return _range_sel(op, lhs.name, float(rhs.value), plan, db)
+        if isinstance(lhs, E.Col) and isinstance(rhs, E.Col) \
+                and op in ("<", "<=", ">", ">="):
+            return 0.5     # textbook estimate for col-vs-col inequality
+        return 1.0         # Param bound / computed lhs: no static knowledge
+
+    if isinstance(e, E.CodeEq):
+        nd = _n_distinct(e.col, plan, db)
+        s = 1.0 / nd if nd else 0.1
+        return 1.0 - s if e.negate else s
+    if isinstance(e, E.CodeIn):
+        nd = _n_distinct(e.col, plan, db)
+        return min(len(e.codes) / nd, 1.0) if nd else 0.3
+    if isinstance(e, E.CodeRange):
+        nd = _n_distinct(e.col, plan, db)
+        return min(max((e.hi - e.lo) / nd, 0.0), 1.0) if nd else 0.3
+    if isinstance(e, (E.WordCode, E.StrContainsWord)):
+        # word membership: no positional statistics; stay conservative
+        s = 0.5
+        return 1.0 - s if e.negate else s
+
+    # un-lowered string predicates (string_dict off): same dictionary
+    # statistics, evaluated against the char matrices at runtime
+    if isinstance(e, E.StrEq):
+        nd = _n_distinct(e.col, plan, db)
+        s = 1.0 / nd if nd and not isinstance(e.value, E.Param) else 1.0
+        return 1.0 - s if e.negate else s
+    if isinstance(e, E.StrIn):
+        nd = _n_distinct(e.col, plan, db)
+        if nd and not any(isinstance(v, E.Param) for v in e.values):
+            return min(len(e.values) / nd, 1.0)
+        return 1.0
+    if isinstance(e, E.StrStartsWith):
+        tc = _base_column(plan, e.col, db)
+        if tc is not None and not isinstance(e.prefix, E.Param):
+            t, name = tc
+            if name in t.vocabs:
+                lo, hi = t.code_range(name, e.prefix)
+                return (hi - lo) / max(len(t.vocabs[name]), 1)
+        return 1.0
+
+    return 1.0             # Where / arithmetic / unknown: assume nothing
+
+
+def _range_sel(op: str, name: str, v: float, plan: ir.Plan, db: Database
+               ) -> float:
+    tc = _base_column(plan, name, db)
+    if tc is None:
+        return 1.0
+    t, cname = tc
+    st = t.stats.get(cname)
+    if st is None:
+        return 1.0
+    lo, hi = float(st.min), float(st.max)
+    span = hi - lo
+    if op == "==":
+        if st.n_distinct:
+            return 1.0 / st.n_distinct
+        return 1.0 / max(span, 1.0)
+    if op == "!=":
+        return 1.0
+    if span <= 0:
+        return 1.0
+    # clamp per leaf: the And/Or/Not combiners assume [0, 1], and a bound
+    # outside the stats range would otherwise go negative / above one
+    if op in ("<", "<="):
+        return min(max((v - lo) / span, 0.0), 1.0)
+    return min(max((hi - v) / span, 0.0), 1.0)     # > / >=
+
+
+def _n_distinct(name: str, plan: ir.Plan, db: Database) -> Optional[int]:
+    tc = _base_column(plan, name, db)
+    if tc is None:
+        return None
+    t, cname = tc
+    st = t.stats.get(cname)
+    return st.n_distinct if st is not None and st.n_distinct else None
+
+
+def _base_column(p: ir.Plan, name: str, db: Database):
+    """(Table, column) provenance of a (possibly renamed) base column."""
+    if isinstance(p, ir.Scan):
+        t = db.table(p.table)
+        return (t, name) if t.schema.has_col(name) else None
+    if isinstance(p, (ir.Select, ir.Sort, ir.Limit, ir.Compact)):
+        return _base_column(p.child, name, db)
+    if isinstance(p, ir.Project):
+        if name in p.outputs:
+            e = p.outputs[name]
+            if isinstance(e, E.Col):
+                return _base_column(p.child, e.name, db)
+            return None
+        return _base_column(p.child, name, db) if p.keep_input else None
+    if isinstance(p, ir.Join):
+        got = _base_column(p.stream, name, db)
+        if got is None and p.kind in ("inner", "left"):
+            got = _base_column(p.build, name, db)
+        return got
+    if isinstance(p, ir.Agg):
+        if name in p.group_by or name in p.carry:
+            return _base_column(p.child, name, db)
+        return None
+    return None

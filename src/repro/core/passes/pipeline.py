@@ -39,8 +39,15 @@ class Settings:
     layout: str = "column"          # §3.3: 'column' (SoA) or 'row' (AoS)
     # --- beyond-paper ---------------------------------------------------------
     use_pallas: bool = False        # fuse hot paths into Pallas TPU kernels
+    # Pallas kernel execution mode: None = auto (interpret only when no
+    # TPU/GPU backend is present), True/False = forced.
+    pallas_interpret: "bool | None" = None
     topk_limit: bool = True         # ORDER BY+LIMIT k -> top-k selection
     dense_agg_cap: int = 1 << 22    # max dense key domain (worst-case alloc)
+    # --- selection-vector compaction (passes/compaction.py) -------------------
+    compaction: bool = True         # compact masked frames at planned points
+    compact_margin: float = 2.0     # capacity headroom over estimated rows
+    compact_min_rows: int = 512     # never compact frames smaller than this
 
 
 class Pass(Protocol):
@@ -52,6 +59,7 @@ class Pass(Protocol):
 def build_pipeline(settings: Settings, bindings: dict | None = None
                    ) -> list[Pass]:
     from repro.core.passes.column_pruning import ColumnPruning
+    from repro.core.passes.compaction import Compaction
     from repro.core.passes.cse_dce import FoldAndSimplify
     from repro.core.passes.date_index import DateIndex
     from repro.core.passes.fusion import SelectFusion
@@ -80,7 +88,11 @@ def build_pipeline(settings: Settings, bindings: dict | None = None
     if settings.cse:
         pipeline.append(FoldAndSimplify())
     if settings.column_pruning:
-        pipeline.append(ColumnPruning())      # last: prune post-rewrite
+        pipeline.append(ColumnPruning())      # prune post-rewrite
+    if settings.compaction:
+        # last: capacities are planned against the final operator strategies
+        # (join lowering, dense aggs, date slices) chosen above
+        pipeline.append(Compaction())
     return pipeline
 
 
@@ -99,27 +111,28 @@ def preset(name: str) -> Settings:
     if name == "dbx":            # commercial in-memory DBMS, no compilation
         return Settings(engine="volcano", fusion=False, partitioning=False,
                         dense_agg=False, date_index=False, string_dict=False,
-                        column_pruning=False, cse=False, hoist=False)
+                        column_pruning=False, cse=False, hoist=False,
+                        compaction=False)
     if name == "naive":          # LegoBase(Naive): inlining/push only
         return Settings(engine="compiled", fusion=True, partitioning=False,
                         dense_agg=False, date_index=False, string_dict=False,
                         column_pruning=False, cse=False, hoist=False,
-                        topk_limit=False)
+                        topk_limit=False, compaction=False)
     if name == "template":       # HyPer-style: per-operator codegen scope
         return Settings(engine="compiled", fusion=False, partitioning=True,
                         dense_agg=False, date_index=False, string_dict=False,
                         column_pruning=False, cse=False, hoist=False,
-                        topk_limit=False)
+                        topk_limit=False, compaction=False)
     if name == "tpch":           # LegoBase(TPC-H/C): + partitioning
         return Settings(engine="compiled", fusion=True, partitioning=True,
                         dense_agg=False, date_index=False, string_dict=False,
                         column_pruning=False, cse=False, hoist=False,
-                        topk_limit=False)
+                        topk_limit=False, compaction=False)
     if name == "strdict":        # LegoBase(StrDict/C)
         return Settings(engine="compiled", fusion=True, partitioning=True,
                         dense_agg=False, date_index=False, string_dict=True,
                         column_pruning=False, cse=False, hoist=False,
-                        topk_limit=False)
+                        topk_limit=False, compaction=False)
     if name == "opt":            # LegoBase(Opt/C): everything
         return Settings()
     if name == "opt-pallas":     # beyond paper: + Pallas fused kernels

@@ -26,7 +26,7 @@ def key_parent_table(p: ir.Plan, name: str, db: Database) -> Optional[str]:
             return p.table
         fk = sch.fk_for(name)
         return fk.ref_table if fk else None
-    if isinstance(p, (ir.Select, ir.Sort, ir.Limit)):
+    if isinstance(p, (ir.Select, ir.Sort, ir.Limit, ir.Compact)):
         return key_parent_table(p.child, name, db)
     if isinstance(p, ir.Project):
         if name in p.outputs:
@@ -51,7 +51,7 @@ def col_kind(p: ir.Plan, name: str, db: Database) -> Optional[ColKind]:
     if isinstance(p, ir.Scan):
         sch = db.table(p.table).schema
         return sch.col(name).kind if sch.has_col(name) else None
-    if isinstance(p, (ir.Select, ir.Sort, ir.Limit)):
+    if isinstance(p, (ir.Select, ir.Sort, ir.Limit, ir.Compact)):
         return col_kind(p.child, name, db)
     if isinstance(p, ir.Project):
         if name in p.outputs:
@@ -91,7 +91,7 @@ def col_domain(p: ir.Plan, name: str, db: Database,
             if st.min >= 0 and st.max < (1 << 20):
                 return int(st.max) + 1
         return None
-    if isinstance(p, (ir.Select, ir.Sort, ir.Limit)):
+    if isinstance(p, (ir.Select, ir.Sort, ir.Limit, ir.Compact)):
         return col_domain(p.child, name, db, hints)
     if isinstance(p, ir.Project):
         if name in p.outputs:

@@ -5,7 +5,8 @@ construction; for a query server that cost must be amortized across
 executions the way Dashti et al. amortize PL/SQL compilation.  The cache
 key is
 
-    (canonicalized plan structure, engine settings, database identity)
+    (canonicalized plan structure, engine settings, database identity,
+     planned compaction capacities)
 
 where "canonicalized plan structure" is the repr of the *logical* plan
 after compile-time parameters (string values, Limit.n) have been
@@ -35,7 +36,7 @@ from repro.core import compile as compile_mod
 from repro.core import ir
 from repro.core.compile import CompiledQuery
 from repro.core.passes.param_binding import bind_plan, plan_params
-from repro.core.passes.pipeline import Settings
+from repro.core.passes.pipeline import Settings, optimize
 
 
 @dataclasses.dataclass
@@ -50,6 +51,11 @@ class CacheStats:
     # the last binding.
     batch_traces: int = 0   # vmapped retraces across all entries
     padded_slots: int = 0   # pad slots executed (bucket size - batch size)
+    # selection-vector compaction (passes/compaction.py): executions that
+    # ran through a compacted plan, and those whose capacity bucket
+    # overflowed at runtime (re-executed via the uncompacted twin).
+    compactions: int = 0
+    overflows: int = 0
 
 
 class PlanCache:
@@ -58,10 +64,13 @@ class PlanCache:
         self.max_entries = max_entries
         self.stats = CacheStats()
         self._entries: "OrderedDict[tuple, CompiledQuery]" = OrderedDict()
-        # last-observed n_batch_traces per live entry (weak: evicted
-        # entries must not pin their compiled programs in memory)
+        # last-observed n_batch_traces / n_overflows per live entry (weak:
+        # evicted entries must not pin their compiled programs in memory)
         self._batch_trace_seen: "weakref.WeakKeyDictionary[CompiledQuery, int]" \
             = weakref.WeakKeyDictionary()
+        self._overflow_seen: "weakref.WeakKeyDictionary[CompiledQuery, int]" \
+            = weakref.WeakKeyDictionary()
+        self._caps_memo: dict[tuple, tuple] = {}
         self._lock = threading.RLock()
 
     # -- keying ----------------------------------------------------------------
@@ -100,10 +109,40 @@ class PlanCache:
         # the full plan structure including substituted literals.  The db
         # component is the Database's monotonic fingerprint, NOT id(db):
         # ids are reused after GC, and a reused address would hand a new
-        # database a stale entry compiled against dead data.
-        key = (repr(plan), dataclasses.astuple(settings),
-               self.db.fingerprint)
-        return key, plan, runtime, owned
+        # database a stale entry compiled against dead data.  The final
+        # component is the capacity vector the Compaction pass plants for
+        # this plan — the entry's static shapes, made explicit so capacity
+        # planning can never alias two entries compiled under different
+        # buckets and each bucket retraces at most once (mirroring PR 3's
+        # batch buckets).  Computing it runs the pass pipeline on a throw-
+        # away copy; the memo keys it on the other components, so only the
+        # first request for a plan shape pays and warm hits stay walk-free.
+        base = (repr(plan), dataclasses.astuple(settings),
+                self.db.fingerprint)
+        caps = self._capacity_signature(base, plan, settings)
+        return base + (caps,), plan, runtime, owned
+
+    def _capacity_signature(self, base: tuple, plan: ir.Plan,
+                            settings: Settings) -> tuple:
+        if not settings.compaction:
+            return ()
+        with self._lock:
+            caps = self._caps_memo.get(base)
+        if caps is None:
+            try:
+                lowered = optimize(copy.deepcopy(plan), self.db, settings)
+                caps = tuple(n.capacity for n in ir.walk(lowered)
+                             if isinstance(n, ir.Compact))
+            except KeyError:
+                # keyed against a database missing the plan's tables (can
+                # never compile); () keeps key_for usable for identity
+                # checks
+                caps = ()
+            with self._lock:
+                if len(self._caps_memo) >= 4 * self.max_entries:
+                    self._caps_memo.clear()
+                self._caps_memo[base] = caps
+        return caps
 
     def key_for(self, plan: ir.Plan, settings: Settings,
                 bindings: Optional[dict] = None,
@@ -150,7 +189,22 @@ class PlanCache:
     def execute(self, plan: ir.Plan, settings: Settings,
                 bindings: Optional[dict] = None, mode: str = "residual"):
         cq, runtime = self.get(plan, settings, bindings, mode)
-        return cq.run(runtime)
+        res = cq.run(runtime)
+        self._note_compaction(cq, 1)
+        return res
+
+    def _note_compaction(self, cq: CompiledQuery, n_execs: int) -> None:
+        """Compaction accounting for `n_execs` executions just performed on
+        `cq`: compacted executions and overflow fallbacks (watermarked like
+        batch traces, so concurrent callers never double-count)."""
+        if not cq.compaction_points:
+            return
+        with self._lock:
+            self.stats.compactions += n_execs
+            seen = self._overflow_seen.get(cq, 0)
+            if cq.n_overflows > seen:
+                self.stats.overflows += cq.n_overflows - seen
+                self._overflow_seen[cq] = cq.n_overflows
 
     # -- batched execution -----------------------------------------------------
     def run_many(self, cq: CompiledQuery, runtime_list) -> list:
@@ -173,6 +227,7 @@ class PlanCache:
                 self.stats.padded_slots += \
                     compile_mod.bucket_size(len(runtime_list)) \
                     - len(runtime_list)
+        self._note_compaction(cq, len(runtime_list))
         return results
 
     def execute_many(self, plan: ir.Plan, settings: Settings,
@@ -203,6 +258,7 @@ class PlanCache:
                 # singleton group: the warm scalar program beats tracing
                 # a fresh bucket-1 vmapped one
                 results[idxs[0]] = cq.run(runtime_i)
+                self._note_compaction(cq, 1)
                 continue
             for i, res in zip(idxs, self.run_many(
                     cq, [prepared[i][2] for i in idxs])):

@@ -245,6 +245,12 @@ class VolcanoEngine:
                     out_cols[spec.name] = np.maximum.reduceat(v, starts)
             return Relation(out_cols, out_chars)
 
+        if isinstance(p, ir.Compact):
+            # the Volcano engine materializes compacted intermediates at
+            # every operator already: a planned compaction point is a no-op
+            # (capacity is a staged-engine static-shape concern)
+            return self._exec(p.child, params)
+
         if isinstance(p, ir.Sort):
             rel = self._exec(p.child, params)
             keys = [rel.key_for_sort(name, asc) for name, asc in p.keys]

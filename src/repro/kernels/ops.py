@@ -1,9 +1,11 @@
 """Jitted public wrappers around the Pallas kernels.
 
-`interpret=True` (default on CPU) executes the kernel bodies in the Pallas
-interpreter for validation; on TPU pass interpret=False to run the compiled
-Mosaic kernels.  `filter_agg_query` is the integration point used by
-`repro.core.compile` when `Settings.use_pallas` is on.
+`interpret` selects the Pallas execution mode: `None` (the default)
+auto-detects — compiled Mosaic/Triton kernels when a TPU or GPU backend is
+present, the (slow, validation-only) Pallas interpreter on CPU.  Pass an
+explicit bool to force either mode (`Settings.pallas_interpret` threads the
+engine-level override through).  `filter_agg_query` is the integration
+point used by `repro.core.operators.agg` when `Settings.use_pallas` is on.
 """
 from __future__ import annotations
 
@@ -13,14 +15,25 @@ from repro.kernels.filter_agg import filter_agg
 from repro.kernels.gather_join import gather_join
 from repro.kernels.topk import masked_topk
 
-__all__ = ["filter_agg", "gather_join", "masked_topk", "filter_agg_query"]
+__all__ = ["filter_agg", "gather_join", "masked_topk", "filter_agg_query",
+           "resolve_interpret"]
 
 
-def filter_agg_query(mask, gidx, value_cols, n_groups, *, interpret=True):
+def resolve_interpret(interpret: "bool | None") -> bool:
+    """Resolve an interpret override: None = interpret only when no
+    accelerator backend (TPU/GPU) is available to compile the kernels."""
+    if interpret is not None:
+        return bool(interpret)
+    import jax
+
+    return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+
+
+def filter_agg_query(mask, gidx, value_cols, n_groups, *, interpret=None):
     """Aggregate a list of 1-D value columns (plus an implicit count column)
     in one fused kernel pass.  Returns (sums (G, A), counts (G,))."""
     ones = jnp.ones_like(mask, dtype=jnp.float32)
     vals = jnp.stack(list(value_cols) + [ones], axis=1).astype(jnp.float32)
     out = filter_agg(mask, gidx.astype(jnp.int32), vals, n_groups,
-                     interpret=interpret)
+                     interpret=resolve_interpret(interpret))
     return out[:, :-1], out[:, -1]

@@ -256,6 +256,7 @@ class QueryServer:
             runtimes = [r for r, _ in window.entries]
             if len(runtimes) == 1:
                 results = [cq.run(runtimes[0])]
+                self.cache._note_compaction(cq, 1)
             else:
                 # one vmapped XLA dispatch for the whole group
                 results = self.cache.run_many(cq, runtimes)
