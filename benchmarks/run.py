@@ -10,10 +10,11 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_ablation, bench_batched_bindings,
-                            bench_compaction, bench_compile, bench_kernels,
-                            bench_ladder, bench_loading, bench_memory,
-                            bench_plan_cache, bench_roofline)
+    from benchmarks import (bench_ablation, bench_adaptive_compaction,
+                            bench_batched_bindings, bench_compaction,
+                            bench_compile, bench_kernels, bench_ladder,
+                            bench_loading, bench_memory, bench_plan_cache,
+                            bench_roofline)
 
     quick = os.environ.get("REPRO_QUICK") == "1"
     print("name,us_per_call,derived")
@@ -24,6 +25,7 @@ def main() -> None:
     bench_plan_cache.run()
     bench_batched_bindings.run()
     bench_compaction.run()
+    bench_adaptive_compaction.run()
     if quick:
         import benchmarks.common as C
         from repro.relational import queries as Q

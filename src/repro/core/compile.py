@@ -35,11 +35,15 @@ operator regions, reproducing the limited optimization scope of
 template-expansion query compilers (paper Fig 2) for the ladder experiment.
 
 Selection-vector compaction (passes/compaction.py) gives the staged program
-a third output: the OR of every compaction point's runtime overflow flag.
-When it fires, the planner's static capacity buckets dropped rows, so
-`run`/`run_many` discard the outputs and re-execute through the lazily
-compiled *uncompacted twin* of the same logical plan — compaction is a
-performance bet whose worst case is latency, never wrong results.
+a third output: a dict mapping each compaction point's id to its TRUE
+valid count at runtime.  A count above the point's planned capacity means
+the static buckets dropped rows, so `run`/`run_many` discard the outputs
+and re-execute through the lazily compiled *uncompacted twin* of the same
+logical plan — compaction is a performance bet whose worst case is
+latency, never wrong results.  The counts themselves are accumulated per
+entry (`observed_max`, underuse streaks) and harvested by `PlanCache`'s
+feedback store, which re-plans capacities from measured headroom after
+repeated overflows and shrinks them after sustained underuse.
 """
 from __future__ import annotations
 
@@ -86,7 +90,9 @@ class CompiledQuery:
     `PlanCache`."""
 
     def __init__(self, plan: ir.Plan, db: Database, settings: Settings,
-                 params: Optional[dict] = None):
+                 params: Optional[dict] = None,
+                 est_params: Optional[dict] = None,
+                 observed: Optional[dict] = None):
         import jax
 
         global STAGINGS
@@ -101,21 +107,53 @@ class CompiledQuery:
         # compile the uncompacted twin lazily.  Hand-planted Compact nodes
         # can overflow even with the pass off, so the copy is gated on
         # either — only plans that provably stay uncompacted skip it.
+        # A measure-only twin plants nothing that can overflow, so it
+        # never needs a fallback of its own: skip the deepcopy.
         pristine = copy.deepcopy(plan) \
-            if settings.compaction or any(isinstance(n, ir.Compact)
-                                          for n in ir.walk(plan)) else None
+            if (settings.compaction and not settings.compact_measure_only) \
+            or any(isinstance(n, ir.Compact) and n.capacity > 0
+                   for n in ir.walk(plan)) else None
         t0 = time.perf_counter()
-        self.plan = optimize(plan, db, settings)
+        # estimation inputs for the Compaction pass: initial-binding values
+        # default to the construction-time params; `observed` carries the
+        # feedback store's measured counts on a re-plan.  PlanCache passes
+        # both explicitly so an entry's capacities always match the
+        # memoized capacity signature in its cache key.
+        self.plan = optimize(plan, db, settings,
+                             est_params=est_params if est_params is not None
+                             else (params or {}),
+                             observed=observed)
         self.pass_time = time.perf_counter() - t0
-        self.compaction_points = sum(
-            1 for n in ir.walk(self.plan) if isinstance(n, ir.Compact))
-        self.capacities = tuple(
-            n.capacity for n in ir.walk(self.plan)
-            if isinstance(n, ir.Compact))
+        # one walk over the optimized plan: hand-planted Compact nodes get
+        # stable `h<i>` ids (no pass-assigned candidate id), then the
+        # points split into real compaction points (capacity > 0) and
+        # measure-only probes (capacity 0 — the overflow twin's
+        # observation points, which count but never truncate and can
+        # never overflow)
+        h, compacts = 0, []
+        for n in ir.walk(self.plan):
+            if isinstance(n, ir.Compact):
+                if n.point_id is None:
+                    n.point_id = f"h{h}"
+                    h += 1
+                compacts.append(n)
+        real = [n for n in compacts if n.capacity > 0]
+        self.compaction_points = len(real)
+        self.capacities = tuple(n.capacity for n in real)
+        self.point_caps = {n.point_id: int(n.capacity) for n in real}
+        self.measure_points = len(compacts) - len(real)
         self._pristine = pristine if self.compaction_points else None
         self._fallback: Optional["CompiledQuery"] = None
         self._fallback_lock = threading.Lock()
         self.n_overflows = 0      # executions (or batch slots) that fell back
+        # adaptive-feedback observation state (harvested by PlanCache):
+        # all-time max true count per point, and the current run of
+        # consecutive all-points-underused executions with its window max
+        self._obs_lock = threading.Lock()
+        self.observed_max: dict[str, int] = {}
+        self.under_streak = 0     # consecutive executions, every point <cap/4
+        self.streak_max: dict[str, int] = {}   # max counts within the streak
+        self._cache_key: Optional[tuple] = None   # set by PlanCache
 
         spec = plan_params(self.plan)
         structural = sorted(n for n, i in spec.items() if i.structural)
@@ -169,12 +207,11 @@ class CompiledQuery:
             n = frame_nrows(frame)
             mask = frame.mask if frame.mask is not None \
                 else ctx.xp.ones((n,), dtype=bool)
-            # third program output: OR of every compaction point's
-            # overflow flag (constant False when the plan has none)
-            oflow = ctx.xp.zeros((), dtype=bool)
-            for f in ctx.overflow:
-                oflow = oflow | f
-            return out, mask, oflow
+            # third program output: every compaction point's TRUE valid
+            # count, keyed by point id (empty dict when the plan has
+            # none).  count > capacity is the overflow signal; the counts
+            # feed the plan cache's capacity feedback either way.
+            return out, mask, dict(ctx.compact_counts)
 
         def fn(inputs):
             self.n_traces += 1   # host side effect: runs only while tracing
@@ -259,8 +296,14 @@ class CompiledQuery:
         return inputs
 
     def _fallback_query(self) -> "CompiledQuery":
-        """The uncompacted twin: same logical plan, compaction off.
-        Compiled lazily on the first overflow, at most once."""
+        """The uncompacted twin: same logical plan, no truncating points.
+        Compiled lazily on the first overflow, at most once.  With the
+        pass enabled it runs in *measure-only* mode: every candidate site
+        gets a capacity-0 probe reporting its TRUE valid count, so one
+        fallback execution hands the feedback store the exact demand at
+        every site (counts from the compacted program are truncated below
+        an overflowed point, and re-planning from truncated counts would
+        converge one layer per k overflows instead of in one step)."""
         from repro.core.passes.compaction import strip_compaction
 
         with self._fallback_lock:
@@ -269,21 +312,70 @@ class CompiledQuery:
                 # them too, or the twin would overflow all over again
                 self._fallback = CompiledQuery(
                     strip_compaction(self._pristine), self.db,
-                    dataclasses.replace(self.settings, compaction=False),
+                    dataclasses.replace(self.settings,
+                                        compact_measure_only=True),
                     params=self.param_defaults)
                 self._pristine = None   # handed over (passes mutated it)
             return self._fallback
+
+    def _merge_twin_observations(self, twin: "CompiledQuery") -> None:
+        """Fold the twin's measured true counts into this entry's
+        observation state, where PlanCache's feedback step harvests
+        them.  Max-merge: idempotent across repeated fallbacks."""
+        with twin._obs_lock:
+            obs = dict(twin.observed_max)
+        with self._obs_lock:
+            for pid, c in obs.items():
+                if c > self.observed_max.get(pid, -1):
+                    self.observed_max[pid] = c
+
+    def _observe(self, slot_counts: list[dict]) -> None:
+        """Feedback accounting for a list of per-execution (or per-real-
+        batch-slot) true-count dicts: all-time max per point, plus the
+        consecutive-underuse streak and its window max (the shrink
+        signal decays — a historical spike must not pin capacity up)."""
+        with self._obs_lock:
+            for counts in slot_counts:
+                oflow = False
+                under = any(pid in self.point_caps for pid in counts)
+                for pid, c in counts.items():
+                    if c > self.observed_max.get(pid, -1):
+                        self.observed_max[pid] = c
+                    cap = self.point_caps.get(pid)
+                    if cap is None:     # measure-only probe: count only
+                        continue
+                    if c > cap:
+                        oflow = True
+                    if 4 * c >= cap:
+                        under = False
+                if oflow or not under:
+                    self.under_streak = 0
+                    self.streak_max = {}
+                else:
+                    self.under_streak += 1
+                    for pid, c in counts.items():
+                        if c > self.streak_max.get(pid, -1):
+                            self.streak_max[pid] = c
 
     def run(self, params: Optional[dict] = None) -> dict[str, np.ndarray]:
         import jax
 
         self.n_executions += 1
-        out, mask, oflow = self._jitted(self.bind(params))
-        if self.compaction_points and bool(np.asarray(oflow)):
-            # a capacity bucket overflowed: the compacted frames dropped
-            # rows, so the outputs are unusable — re-execute uncompacted
-            self.n_overflows += 1
-            return self._fallback_query().run(params)
+        out, mask, counts = self._jitted(self.bind(params))
+        if self.compaction_points or self.measure_points:
+            counts = {pid: int(np.asarray(c)) for pid, c in counts.items()}
+            self._observe([counts])
+            if any(c > self.point_caps[pid] for pid, c in counts.items()
+                   if pid in self.point_caps):
+                # a capacity bucket overflowed: the compacted frames
+                # dropped rows, so the outputs are unusable — re-execute
+                # uncompacted; the twin's measure probes report every
+                # site's TRUE count, folded back for the feedback store
+                self.n_overflows += 1
+                twin = self._fallback_query()
+                res = twin.run(params)
+                self._merge_twin_observations(twin)
+                return res
         out = jax.tree.map(np.asarray, out)
         mask = np.asarray(mask)
         return self._decode(out, mask)
@@ -309,20 +401,36 @@ class CompiledQuery:
         import jax
 
         self.n_executions += 1
-        out, mask, oflow = self._jitted_many(self.bind_many(bindings_list))
+        out, mask, counts = self._jitted_many(self.bind_many(bindings_list))
         out = jax.tree.map(np.asarray, out)
         mask = np.asarray(mask)
-        oflow = np.asarray(oflow)
-        results = [self._decode({k: v[i] for k, v in out.items()}, mask[i])
-                   if not (self.compaction_points and oflow[i]) else None
-                   for i in range(len(bindings_list))]
-        bad = [i for i, r in enumerate(results) if r is None]
+        n_real = len(bindings_list)
+        bad: list[int] = []
+        if self.compaction_points or self.measure_points:
+            # the bucket's pad slots (indices >= n_real, repeats of the
+            # last binding) are masked out of overflow accounting, the
+            # feedback observations, and the fallback re-runs: rows
+            # nobody asked for must not trigger re-planning or wasted
+            # uncompacted-twin executions
+            counts = {pid: np.asarray(c) for pid, c in counts.items()}
+            slot_counts = [{pid: int(v[i]) for pid, v in counts.items()}
+                           for i in range(n_real)]
+            self._observe(slot_counts)
+            bad = [i for i, sc in enumerate(slot_counts)
+                   if any(c > self.point_caps[pid] for pid, c in sc.items()
+                          if pid in self.point_caps)]
+        bad_set = set(bad)
+        results = [None if i in bad_set
+                   else self._decode({k: v[i] for k, v in out.items()},
+                                     mask[i])
+                   for i in range(n_real)]
         if bad:
             # per-slot overflow: only the overflowing bindings re-execute
             # through the uncompacted twin (itself one vmapped dispatch)
             self.n_overflows += len(bad)
-            redo = self._fallback_query().run_many(
-                [bindings_list[i] for i in bad])
+            twin = self._fallback_query()
+            redo = twin.run_many([bindings_list[i] for i in bad])
+            self._merge_twin_observations(twin)
             for i, r in zip(bad, redo):
                 results[i] = r
         return results
@@ -392,14 +500,22 @@ class CompiledQueryBatch:
 
         outs = self._jitted(self.inputs)
         results = []
-        for q, (out, mask, oflow) in zip(self.queries, outs):
-            if q.compaction_points and bool(np.asarray(oflow)):
-                # rare: that query's capacity overflowed — go straight to
-                # its uncompacted twin (q.run() would re-execute the
-                # compacted program only to watch it overflow again)
-                q.n_overflows += 1
-                results.append(q._fallback_query().run())
-                continue
+        for q, (out, mask, counts) in zip(self.queries, outs):
+            if q.compaction_points or q.measure_points:
+                counts = {pid: int(np.asarray(c))
+                          for pid, c in counts.items()}
+                q._observe([counts])
+                if any(c > q.point_caps[pid] for pid, c in counts.items()
+                       if pid in q.point_caps):
+                    # rare: that query's capacity overflowed — go straight
+                    # to its uncompacted twin (q.run() would re-execute
+                    # the compacted program only to watch it overflow
+                    # again)
+                    q.n_overflows += 1
+                    twin = q._fallback_query()
+                    results.append(twin.run())
+                    q._merge_twin_observations(twin)
+                    continue
             out = jax.tree.map(np.asarray, out)
             results.append(_decode_frame(out, np.asarray(mask), q.out_meta))
         return results

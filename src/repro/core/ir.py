@@ -106,9 +106,18 @@ class Compact:
     program's overflow flag fires and the runtime re-executes the
     uncompacted twin plan (CompiledQuery's fallback) — compaction is a
     performance contract, never a correctness one.
+
+    `point_id` names the *candidate site* this point was planted at: the
+    Compaction pass numbers every site it considers (planted or not) in
+    walk order, so an id stays stable across re-plans even when planting
+    decisions change.  The staged program reports each point's true valid
+    count keyed by this id, and `PlanCache`'s feedback store uses the
+    same ids to override the static estimates on re-plan.  Hand-planted
+    nodes (point_id None) get an `h<i>` id assigned at compile time.
     """
     child: "Plan"
     capacity: int
+    point_id: Optional[str] = None
 
 
 @dataclasses.dataclass

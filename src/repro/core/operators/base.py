@@ -91,11 +91,13 @@ class StageCtx:
     input: Callable[[str, Callable], Any]
     params: dict = dataclasses.field(default_factory=dict)
     batched: bool = False
-    # traced per-compaction-point overflow flags (bool scalars), OR-reduced
-    # by the compile driver into the staged program's third output.  A set
-    # flag means more rows survived a predicate than the planner's capacity
-    # bucket holds — the runtime re-executes the uncompacted fallback plan.
-    overflow: list = dataclasses.field(default_factory=list)
+    # traced per-compaction-point TRUE valid counts (int32 scalars), keyed
+    # by the point's id.  The compile driver surfaces the whole dict as the
+    # staged program's third output: a count above the point's capacity is
+    # the overflow signal (the runtime re-executes the uncompacted
+    # fallback plan), and the counts themselves feed PlanCache's adaptive
+    # capacity feedback (re-plan/shrink from measured headroom).
+    compact_counts: dict = dataclasses.field(default_factory=dict)
     n_compactions: int = 0        # Compact points actually staged this walk
 
     @property
@@ -129,10 +131,15 @@ class StageCtx:
                 f"(got shape {v.shape}; batched={self.batched})")
         return v
 
-    def note_overflow(self, flag) -> None:
-        """Register a compaction point's overflow flag (a backend bool
-        scalar: concrete in the collection walk, traced under jit)."""
-        self.overflow.append(flag)
+    def note_compact(self, point_id: str, count) -> None:
+        """Register a compaction point's true valid count (a backend int
+        scalar: concrete in the collection walk, traced under jit).  The
+        count is the cumsum total over the full mask, so it is exact even
+        when it exceeds the point's capacity — that excess IS the
+        overflow signal, and its magnitude is what re-planning needs."""
+        if point_id in self.compact_counts:
+            raise ValueError(f"compaction point {point_id!r} staged twice")
+        self.compact_counts[point_id] = count
         self.n_compactions += 1
 
     def barrier(self, f: Frame) -> Frame:

@@ -11,10 +11,12 @@ to `capacity` rows.  Downstream operators are oblivious — they see an
 ordinary, much smaller Frame whose mask marks only the pad slots.
 
 If more rows survive than the planner estimated, the surplus is dropped
-from the index vector and the point's overflow flag (`count > capacity`)
-is raised through `StageCtx.note_overflow`; the compile driver surfaces it
-as the staged program's third output and `CompiledQuery` re-executes the
-uncompacted fallback plan, so an estimate can only ever cost time.
+from the index vector; the point's TRUE valid count is registered through
+`StageCtx.note_compact` and surfaced (keyed by point id) as part of the
+staged program's third output.  `CompiledQuery` compares each count with
+its planned capacity: on overflow it re-executes the uncompacted fallback
+plan (an estimate can only ever cost time), and either way the measured
+counts feed the plan cache's adaptive capacity feedback.
 """
 from __future__ import annotations
 
@@ -30,13 +32,21 @@ def stage(c: ir.Compact, ctx: StageCtx, defer: bool = False) -> Frame:
     be, xp = ctx.backend, ctx.xp
     n = frame_nrows(f)
     cap = int(c.capacity)
+    if cap <= 0:
+        # measure-only point (the overflow twin): report the true valid
+        # count, touch nothing — no gather, no truncation, so every
+        # point's count is exact even below another point's overflow
+        count = xp.asarray(n, dtype=np.int32) if f.mask is None \
+            else f.mask.astype(np.int32).sum()
+        ctx.note_compact(c.point_id, count)
+        return f
     if cap >= n:
         # nothing to win (also: the 8-row collection walk, where the frame
         # is a sample slice — schema and input registration are unaffected)
         return f
     mask = f.mask if f.mask is not None else ones_mask(xp, n)
     idx, count = be.compact(mask, cap)
-    ctx.note_overflow(count > cap)
+    ctx.note_compact(c.point_id, count)
     cols = {name: Binding(be.take(b.arr, idx), b.kind, b.table, b.col)
             for name, b in f.cols.items()}
     newmask = xp.arange(cap, dtype=np.int32) < count

@@ -28,6 +28,26 @@ how selective the upstream predicates were.  This pass plants
 `PlanCache` folds the planted capacity vector (read off the lowered plan)
 into the plan key: entries are distinct whenever their static shapes are,
 so each capacity bucket is traced at most once.
+
+Adaptive capacity feedback (PR 5).  Estimates come from three sources, in
+priority order:
+
+  1. **observed counts** — `observed[point_id]` is the true valid count a
+     previous compile of the same plan shape measured at runtime (staged
+     as a per-point program output).  An observed count replaces both the
+     estimate AND the static 2x margin: the capacity is the pow2 bucket
+     just above the measured count (measured headroom).
+  2. **initial-binding estimates** — `est_params` holds the first-seen
+     runtime parameter values; a Param-bounded range predicate is
+     estimated against the per-column quantile sketch as if that value
+     were a literal (previously: selectivity 1.0, so parameterized plans
+     never compacted).
+  3. **static sketches** — col-vs-col comparisons between columns of one
+     base table use the measured 2-column range fraction
+     (`Table.pair_frac`) instead of the textbook 0.5.
+
+Candidate sites are numbered in walk order whether or not a point is
+planted, so `point_id` survives re-planning even when decisions flip.
 """
 from __future__ import annotations
 
@@ -54,11 +74,40 @@ class Card:
     masked: bool     # frame carries a (possibly selective) mask
 
 
+@dataclasses.dataclass
+class _Ctx:
+    """Walk state: estimation inputs plus the candidate-site counter."""
+    db: Database
+    s: object                       # Settings
+    est_params: dict                # runtime param name -> initial value
+    observed: dict                  # point_id -> measured valid count
+    next_site: int = 0
+
+    def site_id(self) -> str:
+        pid = f"c{self.next_site}"
+        self.next_site += 1
+        return pid
+
+
+def observed_bucket(count: int) -> int:
+    """Capacity for a *measured* count: the pow2 bucket just above it.
+    No static margin — the bucket roundup is the headroom (≥ +1 row,
+    on average 50%); an estimate that still undershoots re-triggers the
+    overflow feedback, costing one more retrace."""
+    return _bucket(float(count), 1.0)
+
+
 class Compaction:
     name = "Compaction"
 
+    def __init__(self, est_params: Optional[dict] = None,
+                 observed: Optional[dict] = None):
+        self.est_params = dict(est_params or {})
+        self.observed = dict(observed or {})
+
     def run(self, plan: ir.Plan, db: Database, settings) -> ir.Plan:
-        plan, _ = _walk(plan, db, settings, heavy=False)
+        ctx = _Ctx(db, settings, self.est_params, self.observed)
+        plan, _ = _walk(plan, ctx, heavy=False)
         return plan
 
 
@@ -76,13 +125,13 @@ def strip_compaction(plan: ir.Plan) -> ir.Plan:
 # the annotated walk: bottom-up cardinalities, top-down insertions
 # ---------------------------------------------------------------------------
 
-def _walk(p: ir.Plan, db: Database, s, heavy: bool
-          ) -> tuple[ir.Plan, Card]:
+def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool) -> tuple[ir.Plan, Card]:
     """`heavy` marks subtrees consumed (transitively) by an operator whose
     per-row cost does not fuse away — sorts, segment reductions, generic
     join probes.  A pure elementwise+gather pipeline ending in a scalar
     aggregate fuses into a handful of XLA loops already; compacting it
     trades fused passes for an unfused cumsum and loses."""
+    db, s = ctx.db, ctx.s
     if isinstance(p, ir.Scan):
         t = db.table(p.table)
         n = t.nrows
@@ -93,20 +142,22 @@ def _walk(p: ir.Plan, db: Database, s, heavy: bool
         return p, Card(n, float(n), False)
 
     if isinstance(p, ir.Select):
-        child, c = _walk(p.child, db, s, heavy)
+        child, c = _walk(p.child, ctx, heavy)
         p.child = child
-        sel = _selectivity(p.pred, p.child, db)
+        sel = _selectivity(p.pred, p.child, ctx)
         return p, Card(c.phys, c.valid * sel, True)
 
     if isinstance(p, ir.Project):
-        child, c = _walk(p.child, db, s, heavy)
+        child, c = _walk(p.child, ctx, heavy)
         p.child = child
         return p, c
 
     if isinstance(p, ir.Compact):   # pre-existing (hand-planted) point
-        child, c = _walk(p.child, db, s, heavy)
+        child, c = _walk(p.child, ctx, heavy)
         p.child = child
         cap = int(p.capacity)
+        if cap <= 0:                # measure-only: cardinality untouched
+            return p, c
         return p, Card(min(cap, c.phys), min(c.valid, float(cap)), True)
 
     if isinstance(p, ir.Join):
@@ -114,21 +165,21 @@ def _walk(p: ir.Plan, db: Database, s, heavy: bool
         # binary-search probe); the positional strategies are gathers that
         # fuse, so their streams compact only under a heavy ancestor
         sub_heavy = heavy or p.strategy == "generic"
-        stream, sc = _walk(p.stream, db, s, sub_heavy)
-        build, bc = _walk(p.build, db, s, sub_heavy)
+        stream, sc = _walk(p.stream, ctx, sub_heavy)
+        build, bc = _walk(p.build, ctx, sub_heavy)
         # the build's match fraction must reflect its *pre-compaction*
         # cardinality: compaction shrinks phys toward valid, which would
         # inflate the fraction to ~1/margin and poison downstream estimates
         bfrac = min(bc.valid / bc.phys, 1.0) if bc.phys else 1.0
         if sub_heavy:
-            stream, sc = _maybe_compact(stream, sc, s,
+            stream, sc = _maybe_compact(stream, sc, ctx,
                                         _RATIO_ELEMENTWISE)
         # positional strategies index the build by key value: never compact.
         # The generic join argsorts the build; exists_flag scatters it.
         if p.strategy in ("generic", "exists_flag"):
             ratio = _RATIO_SORT if p.strategy == "generic" \
                 else _RATIO_ELEMENTWISE
-            build, bc = _maybe_compact(build, bc, s, ratio)
+            build, bc = _maybe_compact(build, bc, ctx, ratio)
         p.stream, p.build = stream, build
         if p.kind == "inner":
             valid, masked = sc.valid * bfrac, sc.masked or bc.masked
@@ -146,11 +197,11 @@ def _walk(p: ir.Plan, db: Database, s, heavy: bool
         # one-pass consumer that reduces masked rows as cheaply as the
         # compaction itself would run
         agg_heavy = p.strategy != "scalar" and bool(p.group_by)
-        child, c = _walk(p.child, db, s, heavy or agg_heavy)
+        child, c = _walk(p.child, ctx, heavy or agg_heavy)
         if agg_heavy:
             ratio = _RATIO_SORT if p.strategy == "generic" \
                 else _RATIO_ELEMENTWISE
-            child, c = _maybe_compact(child, c, s, ratio)
+            child, c = _maybe_compact(child, c, ctx, ratio)
         p.child = child
         if p.strategy == "dense":
             D = 1
@@ -163,13 +214,13 @@ def _walk(p: ir.Plan, db: Database, s, heavy: bool
         return p, Card(c.phys, min(c.valid, float(c.phys)), True)
 
     if isinstance(p, ir.Sort):
-        child, c = _walk(p.child, db, s, True)
-        child, c = _maybe_compact(child, c, s, _RATIO_SORT)
+        child, c = _walk(p.child, ctx, True)
+        child, c = _maybe_compact(child, c, ctx, _RATIO_SORT)
         p.child = child
         return p, c
 
     if isinstance(p, ir.Limit):
-        child, c = _walk(p.child, db, s, heavy)
+        child, c = _walk(p.child, ctx, heavy)
         p.child = child
         n = p.n if isinstance(p.n, int) else c.phys
         return p, Card(min(n, c.phys), min(c.valid, float(n)), c.masked)
@@ -182,61 +233,96 @@ def _bucket(est_rows: float, margin: float) -> int:
     return 1 << (want - 1).bit_length()
 
 
-def _maybe_compact(node: ir.Plan, card: Card, s,
+def _maybe_compact(node: ir.Plan, card: Card, ctx: _Ctx,
                    ratio: int) -> tuple[ir.Plan, Card]:
     """Plant a Compact over `node` if the planner expects the consumer to
     win at least `ratio`x in row count.  Returns the (possibly wrapped)
-    node and the post-compaction cardinality."""
+    node and the post-compaction cardinality.
+
+    The candidate id is drawn unconditionally — every call site consumes
+    one — so ids depend only on plan structure, never on the estimates:
+    an observed count recorded under capacity A still names the same site
+    after a re-plan chose capacity B (or chose not to plant at all)."""
+    pid = ctx.site_id()
+    s = ctx.s
     if not s.compaction or not card.masked or isinstance(node, ir.Compact):
         return node, card
     if card.phys < s.compact_min_rows:
         return node, card
-    cap = _bucket(card.valid, s.compact_margin)
+    if s.compact_measure_only:
+        # the overflow twin: observe the true valid count at every
+        # candidate site (capacity 0 = no gather, frame unchanged), so a
+        # single fallback execution hands the feedback store the exact
+        # demand at every site — including those an overflowed upstream
+        # point would have truncated in the compacted program
+        return _wrap(node, 0, pid), card
+    obs = ctx.observed.get(pid)
+    if obs is not None:
+        # measured headroom: the bucket just above the observed count
+        # replaces both the static estimate and the static margin
+        cap = observed_bucket(obs)
+        est_valid = float(min(obs, cap))
+    else:
+        cap = _bucket(card.valid, s.compact_margin)
+        est_valid = card.valid
     if cap * ratio > card.phys:
         return node, card
-    return _wrap(node, cap), Card(cap, card.valid, True)
+    return _wrap(node, cap, pid), Card(cap, est_valid, True)
 
 
-def _wrap(node: ir.Plan, cap: int) -> ir.Plan:
+def _wrap(node: ir.Plan, cap: int, pid: str) -> ir.Plan:
     # sink below Projects so the projection's expressions also run narrow
     # (a Project is elementwise: compact-then-project == project-then-compact)
     if isinstance(node, ir.Project):
-        node.child = _wrap(node.child, cap)
+        node.child = _wrap(node.child, cap, pid)
         return node
-    return ir.Compact(node, cap)
+    return ir.Compact(node, cap, point_id=pid)
 
 
 # ---------------------------------------------------------------------------
 # selectivity estimation from Table.stats + predicate structure
 # ---------------------------------------------------------------------------
 
-def _selectivity(e: E.Expr, plan: ir.Plan, db: Database) -> float:
-    s = _sel(e, plan, db)
+def _selectivity(e: E.Expr, plan: ir.Plan, ctx: _Ctx) -> float:
+    s = _sel(e, plan, ctx)
     return min(max(s, 0.0), 1.0)
 
 
-def _sel(e, plan, db) -> float:
+def _sel(e, plan, ctx: _Ctx) -> float:
+    db = ctx.db
     if isinstance(e, E.And):
-        return _sel(e.lhs, plan, db) * _sel(e.rhs, plan, db)
+        return _sel(e.lhs, plan, ctx) * _sel(e.rhs, plan, ctx)
     if isinstance(e, E.Or):
-        a, b = _sel(e.lhs, plan, db), _sel(e.rhs, plan, db)
+        a, b = _sel(e.lhs, plan, ctx), _sel(e.rhs, plan, ctx)
         return a + b - a * b
     if isinstance(e, E.Not):
-        return 1.0 - _sel(e.operand, plan, db)
+        return 1.0 - _sel(e.operand, plan, ctx)
     if isinstance(e, E.Const):
         return 1.0 if e.value else 0.0
 
     if isinstance(e, E.Cmp):
         lhs, rhs, op = e.lhs, e.rhs, e.op
-        if isinstance(rhs, E.Col) and isinstance(lhs, E.Const):
+        if isinstance(rhs, E.Col) and not isinstance(lhs, E.Col):
             lhs, rhs = rhs, lhs
             op = {"<": ">", "<=": ">=", ">": "<", ">=": "<="}.get(op, op)
         if isinstance(lhs, E.Col) and isinstance(rhs, E.Const):
-            return _range_sel(op, lhs.name, float(rhs.value), plan, db)
-        if isinstance(lhs, E.Col) and isinstance(rhs, E.Col) \
-                and op in ("<", "<=", ">", ">="):
-            return 0.5     # textbook estimate for col-vs-col inequality
-        return 1.0         # Param bound / computed lhs: no static knowledge
+            return _range_sel(op, lhs.name, float(rhs.value), plan, db,
+                              quantile=False)
+        if isinstance(lhs, E.Col) and isinstance(rhs, E.Param) \
+                and rhs.name in ctx.est_params:
+            # initial-binding estimate: the first-seen runtime value,
+            # against the quantile sketch (the value is representative,
+            # not exact — later bindings are covered by the overflow
+            # feedback, so a distribution-aware guess beats 1.0)
+            return _range_sel(op, lhs.name, float(ctx.est_params[rhs.name]),
+                              plan, db, quantile=True)
+        if isinstance(lhs, E.Col) and isinstance(rhs, E.Col):
+            pair = _pair_sel(op, lhs.name, rhs.name, plan, db)
+            if pair is not None:
+                return pair    # measured 2-column range fraction
+            if op in ("<", "<=", ">", ">="):
+                return 0.5     # cross-table inequality: textbook estimate
+        return 1.0         # unbound Param / computed lhs: no knowledge
 
     if isinstance(e, E.CodeEq):
         nd = _n_distinct(e.col, plan, db)
@@ -276,8 +362,8 @@ def _sel(e, plan, db) -> float:
     return 1.0             # Where / arithmetic / unknown: assume nothing
 
 
-def _range_sel(op: str, name: str, v: float, plan: ir.Plan, db: Database
-               ) -> float:
+def _range_sel(op: str, name: str, v: float, plan: ir.Plan, db: Database,
+               quantile: bool = False) -> float:
     tc = _base_column(plan, name, db)
     if tc is None:
         return 1.0
@@ -295,11 +381,29 @@ def _range_sel(op: str, name: str, v: float, plan: ir.Plan, db: Database
         return 1.0
     if span <= 0:
         return 1.0
+    if quantile and t.schema.col(cname).kind in (ColKind.INT, ColKind.FLOAT,
+                                                 ColKind.DATE):
+        # equi-depth quantile CDF: error bounded by one knot interval,
+        # robust to skew (the min/max interpolation below is not)
+        frac_le = t.cdf(cname, v)
+        return frac_le if op in ("<", "<=") else 1.0 - frac_le
     # clamp per leaf: the And/Or/Not combiners assume [0, 1], and a bound
     # outside the stats range would otherwise go negative / above one
     if op in ("<", "<="):
         return min(max((v - lo) / span, 0.0), 1.0)
     return min(max((hi - v) / span, 0.0), 1.0)     # > / >=
+
+
+def _pair_sel(op: str, a: str, b: str, plan: ir.Plan, db: Database
+              ) -> Optional[float]:
+    """Measured fraction for `a op b` when both columns resolve to the
+    SAME base table (row-aligned compare is only meaningful there)."""
+    if op not in ("<", "<=", ">", ">=", "==", "!="):
+        return None
+    ta, tb = _base_column(plan, a, db), _base_column(plan, b, db)
+    if ta is None or tb is None or ta[0] is not tb[0]:
+        return None
+    return ta[0].pair_frac(ta[1], op, tb[1])
 
 
 def _n_distinct(name: str, plan: ir.Plan, db: Database) -> Optional[int]:

@@ -48,6 +48,22 @@ class Settings:
     compaction: bool = True         # compact masked frames at planned points
     compact_margin: float = 2.0     # capacity headroom over estimated rows
     compact_min_rows: int = 512     # never compact frames smaller than this
+    # adaptive capacity feedback (plan_cache.py): observed per-point valid
+    # counts drive re-planning — after `compact_replan_after` overflows the
+    # entry re-plans with capacities derived from observed max counts, and
+    # after `compact_shrink_after` consecutive large underuses (observed
+    # < capacity/4 at every point) capacities shrink to the measured
+    # bucket.  Each transition costs at most one retrace per direction.
+    compact_feedback: bool = True   # on at the `opt` rung (with compaction)
+    compact_replan_after: int = 3   # overflows before re-planning up
+    compact_shrink_after: int = 4   # consecutive underuses before shrinking
+    # internal (set by CompiledQuery for the overflow twin, never by
+    # presets): plant measure-only points (capacity 0, frame untouched)
+    # at every candidate site instead of real compaction, so a fallback
+    # execution reports every site's TRUE count — a count measured below
+    # an overflowed point is truncated, and re-planning from truncated
+    # counts converges one layer per k overflows instead of in one step.
+    compact_measure_only: bool = False
 
 
 class Pass(Protocol):
@@ -56,8 +72,9 @@ class Pass(Protocol):
     def run(self, plan: ir.Plan, db, settings: Settings) -> ir.Plan: ...
 
 
-def build_pipeline(settings: Settings, bindings: dict | None = None
-                   ) -> list[Pass]:
+def build_pipeline(settings: Settings, bindings: dict | None = None,
+                   est_params: dict | None = None,
+                   observed: dict | None = None) -> list[Pass]:
     from repro.core.passes.column_pruning import ColumnPruning
     from repro.core.passes.compaction import Compaction
     from repro.core.passes.cse_dce import FoldAndSimplify
@@ -91,14 +108,20 @@ def build_pipeline(settings: Settings, bindings: dict | None = None
         pipeline.append(ColumnPruning())      # prune post-rewrite
     if settings.compaction:
         # last: capacities are planned against the final operator strategies
-        # (join lowering, dense aggs, date slices) chosen above
-        pipeline.append(Compaction())
+        # (join lowering, dense aggs, date slices) chosen above.
+        # `est_params` are the first-seen runtime bindings (initial
+        # estimates for Param-bounded predicates); `observed` maps
+        # candidate point ids to measured valid counts and overrides the
+        # static estimates on re-plan (adaptive capacity feedback).
+        pipeline.append(Compaction(est_params=est_params, observed=observed))
     return pipeline
 
 
 def optimize(plan: ir.Plan, db, settings: Settings,
-             bindings: dict | None = None) -> ir.Plan:
-    for p in build_pipeline(settings, bindings):
+             bindings: dict | None = None,
+             est_params: dict | None = None,
+             observed: dict | None = None) -> ir.Plan:
+    for p in build_pipeline(settings, bindings, est_params, observed):
         plan = p.run(plan, db, settings)
     return plan
 

@@ -35,6 +35,7 @@ from typing import Optional
 from repro.core import compile as compile_mod
 from repro.core import ir
 from repro.core.compile import CompiledQuery
+from repro.core.passes.compaction import observed_bucket
 from repro.core.passes.param_binding import bind_plan, plan_params
 from repro.core.passes.pipeline import Settings, optimize
 
@@ -56,6 +57,29 @@ class CacheStats:
     # overflowed at runtime (re-executed via the uncompacted twin).
     compactions: int = 0
     overflows: int = 0
+    # adaptive capacity feedback: entries re-planned with capacities
+    # derived from observed max counts (after `compact_replan_after`
+    # overflows) and entries shrunk to the measured bucket (after
+    # `compact_shrink_after` consecutive large underuses).
+    replans: int = 0
+    shrinks: int = 0
+
+
+@dataclasses.dataclass
+class _Feedback:
+    """Per-plan-shape runtime observations (keyed by the cache key's base
+    — canonical plan + settings + db fingerprint — so every capacity
+    generation of one shape shares a single history)."""
+    est_params: dict                       # first-seen runtime bindings
+    observed: dict = dataclasses.field(default_factory=dict)  # pid -> max
+    overrides: Optional[dict] = None       # pid -> count fed to the pass
+    overflows: int = 0                     # since the last re-plan
+    replans: int = 0
+    shrinks: int = 0
+    # capacity generation: bumped by every re-plan/shrink transition so a
+    # signature computed against pre-transition overrides (optimize runs
+    # outside the lock) can never be memoized after the transition
+    gen: int = 0
 
 
 class PlanCache:
@@ -71,6 +95,10 @@ class PlanCache:
         self._overflow_seen: "weakref.WeakKeyDictionary[CompiledQuery, int]" \
             = weakref.WeakKeyDictionary()
         self._caps_memo: dict[tuple, tuple] = {}
+        # per-plan-shape feedback: observed counts, override state, and
+        # the initial-estimate bindings.  Keyed by the key base, which
+        # includes db.fingerprint — a reloaded database starts fresh.
+        self._feedback: dict[tuple, _Feedback] = {}
         self._lock = threading.RLock()
 
     # -- keying ----------------------------------------------------------------
@@ -119,18 +147,61 @@ class PlanCache:
         # first request for a plan shape pays and warm hits stay walk-free.
         base = (repr(plan), dataclasses.astuple(settings),
                 self.db.fingerprint)
-        caps = self._capacity_signature(base, plan, settings)
+        caps = self._capacity_signature(base, plan, settings, runtime)
         return base + (caps,), plan, runtime, owned
 
+    def _feedback_for(self, base: tuple, runtime: dict) -> _Feedback:
+        """The plan shape's feedback record, created on first sight with
+        that request's runtime bindings as the initial-estimate values.
+        The base includes db.fingerprint, so a reloaded database can
+        never inherit another's observations or estimates."""
+        with self._lock:
+            fb = self._feedback.get(base)
+            if fb is None:
+                if len(self._feedback) >= 4 * self.max_entries:
+                    # the memoized signatures were computed under the
+                    # records being dropped: clear them in tandem, or a
+                    # surviving memo would key learned capacities while
+                    # compiles see a fresh (override-free) record
+                    self._feedback.clear()
+                    self._caps_memo.clear()
+                fb = self._feedback[base] = _Feedback(
+                    est_params=dict(runtime))
+            return fb
+
     def _capacity_signature(self, base: tuple, plan: ir.Plan,
-                            settings: Settings) -> tuple:
+                            settings: Settings, runtime: dict) -> tuple:
+        """The capacity vector keyed into the plan key, memoized per base
+        as `(caps, est_params, overrides)` — the estimation snapshot the
+        vector was computed under, which `_get_prepared` reuses so the
+        compiled entry's capacities always equal its key's signature.
+        The pass pipeline runs outside the lock; the generation check
+        prevents a computation that raced a re-plan/shrink transition
+        from memoizing a stale vector over the transition's pop."""
         if not settings.compaction:
             return ()
+        # warm path: one lock round-trip, no feedback-record touch
         with self._lock:
-            caps = self._caps_memo.get(base)
-        if caps is None:
+            memo = self._caps_memo.get(base)
+        if memo is not None:
+            return memo[0]
+        while True:
+            # re-fetched every iteration: the feedback store's wholesale
+            # eviction can drop (and a later request re-create) this
+            # base's record while optimize() runs outside the lock — a
+            # stale `fb` would fail the identity check below forever
+            fb = self._feedback_for(base, runtime)
+            with self._lock:
+                memo = self._caps_memo.get(base)
+                if memo is not None:
+                    return memo[0]
+                gen = fb.gen
+                est = dict(fb.est_params)
+                overrides = None if fb.overrides is None \
+                    else dict(fb.overrides)
             try:
-                lowered = optimize(copy.deepcopy(plan), self.db, settings)
+                lowered = optimize(copy.deepcopy(plan), self.db, settings,
+                                   est_params=est, observed=overrides)
                 caps = tuple(n.capacity for n in ir.walk(lowered)
                              if isinstance(n, ir.Compact))
             except KeyError:
@@ -139,10 +210,12 @@ class PlanCache:
                 # checks
                 caps = ()
             with self._lock:
+                if self._feedback.get(base) is not fb or fb.gen != gen:
+                    continue    # transition raced us: recompute
                 if len(self._caps_memo) >= 4 * self.max_entries:
                     self._caps_memo.clear()
-                self._caps_memo[base] = caps
-        return caps
+                self._caps_memo[base] = (caps, est, overrides)
+                return caps
 
     def key_for(self, plan: ir.Plan, settings: Settings,
                 bindings: Optional[dict] = None,
@@ -165,9 +238,27 @@ class PlanCache:
             self.stats.misses += 1
         # compile outside the lock (long); concurrent duplicate compiles are
         # prevented one level up by QueryServer's in-flight dedup.  Passes
-        # mutate the plan, so compile from a private copy.
+        # mutate the plan, so compile from a private copy.  Estimation
+        # inputs come from the memoized snapshot the key's capacity
+        # signature was computed under — NOT from this request's bindings
+        # — so the compiled capacities always equal the signature inside
+        # `key` (falling back to the live feedback record in the rare
+        # window where a transition popped the memo after keying: the
+        # entry then belongs to the superseded key and is simply retired
+        # by LRU once the re-keyed requests stop hitting it).
+        est, observed = runtime, None
+        if settings.compaction:
+            with self._lock:
+                memo = self._caps_memo.get(key[:-1])
+            if memo is not None:
+                _, est, observed = memo
+            else:
+                fb = self._feedback_for(key[:-1], runtime)
+                est, observed = fb.est_params, fb.overrides
         cq = CompiledQuery(plan if owned else copy.deepcopy(plan),
-                           self.db, settings, params=runtime)
+                           self.db, settings, params=runtime,
+                           est_params=est, observed=observed)
+        cq._cache_key = key
         with self._lock:
             self.stats.compiles += 1
             self._entries[key] = cq
@@ -196,15 +287,91 @@ class PlanCache:
     def _note_compaction(self, cq: CompiledQuery, n_execs: int) -> None:
         """Compaction accounting for `n_execs` executions just performed on
         `cq`: compacted executions and overflow fallbacks (watermarked like
-        batch traces, so concurrent callers never double-count)."""
+        batch traces, so concurrent callers never double-count), then the
+        adaptive-feedback step."""
         if not cq.compaction_points:
             return
         with self._lock:
             self.stats.compactions += n_execs
             seen = self._overflow_seen.get(cq, 0)
-            if cq.n_overflows > seen:
-                self.stats.overflows += cq.n_overflows - seen
+            delta = max(cq.n_overflows - seen, 0)
+            if delta:
+                self.stats.overflows += delta
                 self._overflow_seen[cq] = cq.n_overflows
+        self._feedback_step(cq, delta)
+
+    def _feedback_step(self, cq: CompiledQuery, overflow_delta: int) -> None:
+        """Close the loop between runtime and planner: merge the entry's
+        measured counts into the plan shape's feedback record, then —
+
+          * after `compact_replan_after` overflows, re-plan the shape with
+            capacities derived from the observed max counts (the stale
+            entry is evicted; the next request compiles against measured
+            headroom);
+          * after `compact_shrink_after` consecutive large underuses
+            (every point < capacity/4), shrink to the bucket over the
+            streak's window max (a historical spike must not pin
+            capacity up forever).
+
+        Each transition costs at most one retrace per direction: the new
+        capacity vector is a new plan key, compiled once."""
+        s = cq.settings
+        if not (s.compaction and s.compact_feedback) \
+                or cq._cache_key is None:
+            return
+        base = cq._cache_key[:-1]
+        with cq._obs_lock:
+            observed = dict(cq.observed_max)
+            under = cq.under_streak
+            streak_max = dict(cq.streak_max)
+        with self._lock:
+            fb = self._feedback.get(base)
+            if fb is None:
+                return
+            for pid, c in observed.items():
+                if c > fb.observed.get(pid, -1):
+                    fb.observed[pid] = c
+            fb.overflows += overflow_delta
+            if fb.overflows >= s.compact_replan_after:
+                fb.overrides = {**(fb.overrides or {}), **fb.observed}
+                fb.overflows = 0
+                fb.replans += 1
+                self.stats.replans += 1
+                self._retire(cq, base, fb)
+            elif under >= s.compact_shrink_after and streak_max \
+                    and any(observed_bucket(c) < cq.point_caps.get(pid, 0)
+                            for pid, c in streak_max.items()
+                            if pid in cq.point_caps):
+                fb.overrides = {**(fb.overrides or {}), **streak_max}
+                # the shrink is evidence the old maxima are stale: decay
+                # fb.observed to the window max too, or a later re-plan
+                # would resurrect a historical spike and ping-pong the
+                # capacity back up (docs §6: "a historical spike cannot
+                # pin capacity up")
+                fb.observed.update(streak_max)
+                fb.shrinks += 1
+                self.stats.shrinks += 1
+                self._retire(cq, base, fb)
+
+    def _retire(self, cq: CompiledQuery, base: tuple,
+                fb: _Feedback) -> None:
+        """Drop a re-planned entry's stale state (caller holds the lock):
+        the memoized capacity signature (the next `_prepare` recomputes it
+        under the new overrides, producing a new key) and the compiled
+        entry itself.  `fb.gen` advances so a signature computed against
+        the pre-transition overrides can never be memoized afterwards.
+        The entry is *detached* (`_cache_key = None`): a caller still
+        holding `cq` can keep executing it, but its observations are no
+        longer harvested — they were consumed by this transition, and
+        re-merging them would resurrect deliberately decayed maxima."""
+        fb.gen += 1
+        self._caps_memo.pop(base, None)
+        if self._entries.get(cq._cache_key) is cq:
+            del self._entries[cq._cache_key]
+        cq._cache_key = None
+        with cq._obs_lock:
+            cq.under_streak = 0
+            cq.streak_max = {}
 
     # -- batched execution -----------------------------------------------------
     def run_many(self, cq: CompiledQuery, runtime_list) -> list:

@@ -61,6 +61,20 @@ class Database:
     def table(self, name: str) -> Table:
         return self.tables[name]
 
+    def reload(self, tables: dict[str, Table]) -> None:
+        """Swap in freshly loaded tables *in place*.
+
+        Data, `Table.stats`, and the selectivity sketches may all differ
+        after a reload, so every derived structure is dropped and the
+        fingerprint is bumped: a `PlanCache` keyed on the old fingerprint
+        treats this object as a brand-new database — stale compiled
+        entries AND stale memoized capacity vectors can never be served
+        against the new data."""
+        self.fingerprint = next(_FINGERPRINTS)
+        self.tables = tables
+        self._device_cols.clear()
+        self.reset_aux()
+
     # -- partitioning (§3.2.1) ----------------------------------------------
     def fk_csr(self, table: str, col: str) -> tuple[np.ndarray, np.ndarray]:
         """(perm, offsets): rows of `table` clustered by FK `col`.

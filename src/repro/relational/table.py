@@ -46,6 +46,11 @@ class Table:
     word_vocabs: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     stats: dict[str, ColumnStats] = dataclasses.field(default_factory=dict)
     _char_cache: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # lazy selectivity sketches (built on first use by the Compaction pass):
+    # per-column equi-depth quantiles and measured 2-column range fractions.
+    _quantile_cache: dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict)
+    _pair_cache: dict[tuple, float] = dataclasses.field(default_factory=dict)
 
     @property
     def name(self) -> str:
@@ -72,6 +77,59 @@ class Table:
             if cdef.kind == ColKind.TEXT:
                 st.n_distinct = len(self.word_vocabs[cdef.name])
             self.stats[cdef.name] = st
+
+    # -- selectivity sketches (§3.5.2 statistics knowledge, extended) -------
+    QUANTILES = 129   # equi-depth knots: CDF error bounded by 1/(k-1)
+
+    def quantile_sketch(self, name: str) -> np.ndarray:
+        """Equi-depth quantile knots of a numeric column (sorted, length
+        QUANTILES).  One pass at first use, cached; `cdf` interpolates on
+        it, so any value bound — including one only known at bind time —
+        gets a distribution-aware range estimate instead of the min/max
+        linear interpolation."""
+        q = self._quantile_cache.get(name)
+        if q is None:
+            arr = self.data[name]
+            if arr.size == 0:
+                q = np.zeros(2, dtype=np.float64)
+            else:
+                knots = np.linspace(0.0, 1.0, self.QUANTILES)
+                q = np.quantile(arr.astype(np.float64), knots)
+            self._quantile_cache[name] = q
+        return q
+
+    def cdf(self, name: str, v: float) -> float:
+        """Estimated fraction of rows with column value <= v."""
+        q = self.quantile_sketch(name)
+        k = len(q) - 1
+        if v < q[0]:
+            return 0.0
+        if v >= q[-1]:
+            return 1.0
+        i = int(np.searchsorted(q, v, side="right")) - 1
+        i = min(max(i, 0), k - 1)
+        span = q[i + 1] - q[i]
+        frac = (v - q[i]) / span if span > 0 else 1.0
+        return (i + min(max(frac, 0.0), 1.0)) / k
+
+    def pair_frac(self, a: str, op: str, b: str) -> float:
+        """Measured fraction of rows satisfying `a op b` for two columns
+        of THIS table (row-aligned compare, one vectorized pass, cached).
+        The 2-column range sketch behind col-vs-col selectivity — replaces
+        the textbook 0.5 with the observed fraction."""
+        key = (a, op, b)
+        got = self._pair_cache.get(key)
+        if got is None:
+            x, y = self.data[a], self.data[b]
+            if x.size == 0:
+                got = 0.5
+            else:
+                cmp = {"<": np.less, "<=": np.less_equal,
+                       ">": np.greater, ">=": np.greater_equal,
+                       "==": np.equal, "!=": np.not_equal}[op]
+                got = float(np.count_nonzero(cmp(x, y))) / x.size
+            self._pair_cache[key] = got
+        return got
 
     # -- un-optimized (no string dictionary) physical representation -------
     def char_matrix(self, name: str) -> np.ndarray:

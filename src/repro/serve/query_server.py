@@ -45,6 +45,11 @@ class ServerStats:
     shared_compiles: int = 0   # groups that parked on an in-flight compile
     batches: int = 0           # dispatched groups (including singletons)
     coalesced: int = 0         # requests that shared a vmapped dispatch
+    # adaptive capacity feedback, passed through from the shared
+    # PlanCache after each group (re-plans from observed overflows,
+    # shrinks from sustained underuse — see CacheStats)
+    replans: int = 0
+    shrinks: int = 0
 
 
 @dataclasses.dataclass
@@ -141,13 +146,44 @@ class QueryServer:
             self._futures = [f for f in self._futures if not f.done()]
 
     def close(self) -> None:
+        """Close the server: no new submissions, then settle every
+        outstanding request — flush pending windows, wait for their
+        futures, and *fail* anything that still hasn't resolved.  A
+        future returned by `submit()` must never stay pending after
+        `close()` returns, no matter how the shutdown races an open
+        window (e.g. one popped by the flusher but not yet dispatched
+        when the pool goes down)."""
         with self._cv:
             self._closed = True
-        self.drain()
-        with self._cv:
             self._cv.notify_all()
+        self.flush()
+        with self._cv:
+            pending = list(self._futures)
+        # bounded, unlike drain(): a window dropped by a shutdown race
+        # must not park close() forever — anything still unresolved after
+        # the grace period is failed below instead of waited on
+        wait(pending, timeout=60)
         self._pool.shutdown(wait=True)
         self._flusher.join(timeout=5)
+        # belt and suspenders: a window that slipped past drain (popped
+        # after the final flush) or a future the pool never ran would
+        # otherwise hang its owner forever — resolve them with an error.
+        with self._cv:
+            leftovers = list(self._windows.values())
+            self._windows.clear()
+            unresolved = [f for f in self._futures if not f.done()]
+            self._futures = []
+        exc = RuntimeError("server closed with the request unresolved")
+        for w in leftovers:
+            with self._lock:
+                self.stats.errors += len(w.entries)
+            self._fail_window(w, exc)
+        for f in unresolved:
+            try:
+                if f.set_running_or_notify_cancel():
+                    f.set_exception(exc)
+            except (InvalidStateError, RuntimeError):
+                pass
 
     def __enter__(self):
         return self
@@ -265,6 +301,8 @@ class QueryServer:
                 self.stats.batches += 1
                 if len(results) > 1:
                     self.stats.coalesced += len(results)
+                self.stats.replans = self.cache.stats.replans
+                self.stats.shrinks = self.cache.stats.shrinks
             for (_, fut), res in zip(window.entries, results):
                 # a client may have cancelled its future while the window
                 # was pending; that must not poison the rest of the group

@@ -162,6 +162,38 @@ def test_db_identity_uses_fingerprint_not_id(db):
     assert key[2] == db.fingerprint
 
 
+def test_reload_invalidates_capacity_memo_and_entries():
+    """Regression: the capacity-signature memo is keyed by (plan shape,
+    settings, db.fingerprint).  A `Database.reload` changes `Table.stats`
+    under the same object — the fingerprint bump must invalidate both the
+    memoized capacity vectors and the compiled entries, or a re-planted
+    capacity computed against dead statistics gets served to new data."""
+    from repro.relational import Database
+
+    db = Database.tpch(sf=0.01, seed=0)
+    cache = PlanCache(db)
+    plan = QUERIES["q3"]
+    k1 = cache.key_for(plan(), preset("opt"))
+    caps1 = k1[-1]
+    assert caps1, "q3 must plant compaction points"
+    cache.execute(plan(), preset("opt"))
+    assert cache.stats.compiles == 1
+
+    small = Database.tpch(sf=0.002, seed=1)
+    old_fp = db.fingerprint
+    db.reload(small.tables)
+    assert db.fingerprint != old_fp
+    k2 = cache.key_for(plan(), preset("opt"))
+    assert k2 != k1
+    # the capacity vector was recomputed from the NEW table stats, not
+    # reused from the stale memo (an 5x-smaller lineitem cannot plan the
+    # same buckets — at worst the points vanish below compact_min_rows)
+    assert k2[-1] != caps1
+    # and the stale compiled entry is unreachable: fresh compile
+    cache.execute(plan(), preset("opt"))
+    assert cache.stats.compiles == 2
+
+
 # ---------------------------------------------------------------------------
 # query server
 # ---------------------------------------------------------------------------
@@ -214,3 +246,49 @@ def test_server_shares_one_inflight_compilation(db):
     assert_matches(r1, oracle.execute(build(), defaults))
     assert_matches(r2, oracle.execute(build(),
                                       dict(defaults, **ALT_BINDINGS["q6"])))
+
+
+def test_close_under_load_resolves_every_future(db):
+    """Satellite bugfix: close() racing open windows.  Submitters hammer
+    the server while it closes mid-traffic; every future that `submit`
+    returned must resolve (result or error) — a window popped by the
+    flusher around the close, or one stranded undispatched, must be
+    flushed or failed, never silently dropped."""
+    build, defaults = PARAM_QUERIES["q6"]
+    alt = dict(defaults, **ALT_BINDINGS["q6"])
+    futs, futs_lock = [], threading.Lock()
+    stop = threading.Event()
+
+    srv = QueryServer(db, preset("opt"), max_workers=2,
+                      window_s=0.002, max_batch=4)
+
+    def hammer(i):
+        b = defaults if i % 2 else alt
+        while not stop.is_set():
+            try:
+                f = srv.submit(build(), dict(b))
+            except RuntimeError:
+                return            # server closed: expected once racing
+            with futs_lock:
+                futs.append(f)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    # let traffic build up, then close mid-flight
+    threading.Event().wait(0.05)
+    srv.close()
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive()
+    with futs_lock:
+        taken = list(futs)
+    assert taken, "no requests made it in before close"
+    for f in taken:
+        assert f.done(), "close() left a submitted future pending"
+    resolved = sum(1 for f in taken
+                   if f.exception(timeout=0) is None)
+    # at least the pre-close traffic must have real results; the rest
+    # must carry an error, not hang
+    assert resolved > 0
