@@ -1,0 +1,72 @@
+"""Static-analysis overhead (PR 6): what the analysis layer and the
+inter-pass verifier cost at optimize time.
+
+Three measurements per query, writing ``BENCH_analysis.json``:
+
+  analyze_us     one `analyze()` pass over the final optimized plan — the
+                 price every analysis consumer (hash-map lowering,
+                 compaction estimation, one verifier rule set) pays
+  optimize_us    `optimize()` at the default settings (verifier ON — the
+                 shipped configuration)
+  optimize_off_us  `optimize()` with `verify_passes=False` (the serving
+                 escape hatch)
+
+The acceptance bound — analysis overhead ≤ 5% of optimize time — is
+checked as analyze_us / optimize_us: one analysis pass against the
+default optimize.  Against the verifier-off time the ratio is higher by
+construction (analysis is the core work of two of the passes), so both
+ratios are reported.  All of this is compile-time cost: a single XLA
+trace is ~2 orders of magnitude above either number.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from repro.core import preset
+from repro.core.analysis import analyze
+from repro.core.passes.pipeline import optimize
+from repro.relational.queries import QUERIES
+
+from benchmarks.common import REPEATS, csv, db
+
+
+def _best(fn, repeats: int) -> float:
+    times = []
+    for _ in range(max(3, repeats)):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def run(out=print, queries=None) -> dict:
+    queries = queries or sorted(QUERIES)
+    d = db()
+    s_on = preset("opt")
+    s_off = dataclasses.replace(s_on, verify_passes=False)
+    results: dict[str, dict[str, float]] = {}
+    for qname in queries:
+        fn = QUERIES[qname]
+        optimize(fn(), d, s_on)  # warm sketches/caches
+        t_on = _best(lambda: optimize(fn(), d, s_on), REPEATS)
+        t_off = _best(lambda: optimize(fn(), d, s_off), REPEATS)
+        final = optimize(fn(), d, s_off)
+        t_an = _best(lambda: analyze(final, d), REPEATS)
+        results[qname] = {
+            "analyze_us": t_an * 1e6,
+            "optimize_us": t_on * 1e6,
+            "optimize_off_us": t_off * 1e6,
+            "analyze_over_optimize": t_an / t_on,
+            "verify_ratio": t_on / t_off,
+        }
+        out(csv(f"analysis/{qname}/analyze", t_an,
+                f"{100 * t_an / t_on:.1f}% of optimize"))
+    with open("BENCH_analysis.json", "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -26,7 +26,6 @@ import time
 import numpy as np
 
 from repro.core import CompiledQuery, VolcanoEngine, preset
-from repro.core import ir
 from repro.relational import Database
 from repro.relational.queries import QUERIES
 

@@ -4,7 +4,6 @@ from __future__ import annotations
 import os
 import time
 
-import numpy as np
 
 from repro.core import CompiledQuery, VolcanoEngine, preset
 from repro.relational import Database

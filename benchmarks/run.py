@@ -11,10 +11,10 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_ablation, bench_adaptive_compaction,
-                            bench_batched_bindings, bench_compaction,
-                            bench_compile, bench_kernels, bench_ladder,
-                            bench_loading, bench_memory, bench_plan_cache,
-                            bench_roofline)
+                            bench_analysis, bench_batched_bindings,
+                            bench_compaction, bench_compile, bench_kernels,
+                            bench_ladder, bench_loading, bench_memory,
+                            bench_plan_cache, bench_roofline)
 
     quick = os.environ.get("REPRO_QUICK") == "1"
     print("name,us_per_call,derived")
@@ -26,8 +26,8 @@ def main() -> None:
     bench_batched_bindings.run()
     bench_compaction.run()
     bench_adaptive_compaction.run()
+    bench_analysis.run()
     if quick:
-        import benchmarks.common as C
         from repro.relational import queries as Q
         keep = {"q1", "q3", "q6", "q12"}
         full = dict(Q.QUERIES)

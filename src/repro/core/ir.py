@@ -161,26 +161,51 @@ def walk(p: Plan):
 
 
 def plan_repr(p: Plan, indent: int = 0) -> str:
+    """Readable plan dump including the *physical* annotations the passes
+    attach (strategies, date-slice bounds, pruned column lists, planned
+    capacities) — what verifier errors and pass debugging quote, so a
+    dump must pin down the exact lowering, not just the logical shape."""
     pad = "  " * indent
     if isinstance(p, Scan):
         extra = ""
         if p.date_slice:
-            extra += f" date_slice[{p.date_slice.col}]"
+            ds = p.date_slice
+            extra += f" date_slice[{ds.col}:{ds.lo}..{ds.hi}]"
         if p.columns is not None:
-            extra += f" cols={len(p.columns)}"
+            extra += f" cols={p.columns}"
         return f"{pad}Scan({p.table}{extra})"
     if isinstance(p, Select):
         return f"{pad}Select\n{plan_repr(p.child, indent + 1)}"
     if isinstance(p, Project):
-        return f"{pad}Project({list(p.outputs)})\n{plan_repr(p.child, indent + 1)}"
+        keep = "" if p.keep_input else ", keep_input=False"
+        return (f"{pad}Project({list(p.outputs)}{keep})\n"
+                f"{plan_repr(p.child, indent + 1)}")
     if isinstance(p, Join):
-        return (f"{pad}Join[{p.kind}/{p.strategy}]({p.stream_key}={p.build_key})\n"
+        keys = f"{p.stream_key}={p.build_key}"
+        if p.stream_key2 is not None or p.build_key2 is not None:
+            keys += f", {p.stream_key2}={p.build_key2}"
+        extra = ""
+        if p.build_table is not None:
+            extra += f" build_table={p.build_table}"
+        if p.domain is not None:
+            extra += f" domain={p.domain}"
+        if p.bucket_width is not None:
+            extra += f" bucket_width={p.bucket_width}"
+        return (f"{pad}Join[{p.kind}/{p.strategy}]({keys}){extra}\n"
                 f"{plan_repr(p.stream, indent + 1)}\n{plan_repr(p.build, indent + 1)}")
     if isinstance(p, Agg):
+        extra = ""
+        if p.carry:
+            extra += f", carry={p.carry}"
+        if p.domains is not None:
+            extra += f", domains={p.domains}"
         return (f"{pad}Agg[{p.strategy}](by={p.group_by}, "
-                f"aggs={[a.name for a in p.aggs]})\n{plan_repr(p.child, indent + 1)}")
+                f"aggs={[a.name for a in p.aggs]}{extra})\n"
+                f"{plan_repr(p.child, indent + 1)}")
     if isinstance(p, Compact):
-        return f"{pad}Compact(cap={p.capacity})\n{plan_repr(p.child, indent + 1)}"
+        pid = f", point={p.point_id}" if p.point_id is not None else ""
+        return (f"{pad}Compact(cap={p.capacity}{pid})\n"
+                f"{plan_repr(p.child, indent + 1)}")
     if isinstance(p, Sort):
         return f"{pad}Sort({p.keys})\n{plan_repr(p.child, indent + 1)}"
     if isinstance(p, Limit):

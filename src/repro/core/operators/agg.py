@@ -13,7 +13,7 @@ import numpy as np
 from repro.core import ir
 from repro.core.expr import eval_expr
 from repro.core.operators.base import (Binding, F32BIG, Frame, StageCtx,
-                                       and_masks, frame_nrows, ones_mask)
+                                       frame_nrows, ones_mask)
 
 
 def stage(a: ir.Agg, ctx: StageCtx, defer: bool = False) -> Frame:

@@ -150,22 +150,28 @@ def _key2_bound(j: ir.Join, stream: Frame, build: Frame) -> np.uint32:
     The generic composite join packs `k1 * K2 + k2` into uint32; K2 must
     exceed *both* sides' k2 values or distinct pairs collide, and the
     packed value must fit 32 bits or the pack wraps and matches garbage.
-    Both bounds are derived from load-time stats where available and
-    checked at staging time — a silent-overflow pack never compiles.
+    Both bounds come from `analysis.composite_pack_bound` (the verifier's
+    final-only `key-pack` rule applies the same arithmetic to ColInfo
+    bounds at optimize time); staging re-checks against the *staged
+    frames'* provenance — a silent-overflow pack never compiles, even on
+    hand-built plans that bypassed the pipeline.
     """
-    k2_maxes = [m for m in (_stats_max(build, j.build_key2),
-                            _stats_max(stream, j.stream_key2))
-                if m is not None]
-    K2 = int(max(k2_maxes)) + 1 if k2_maxes else 1 << 20
+    from repro.core.analysis import PlanInvariantError, composite_pack_bound
+
     k1_maxes = [m for m in (_stats_max(build, j.build_key),
                             _stats_max(stream, j.stream_key))
                 if m is not None]
-    if k1_maxes:
-        packed_max = max(k1_maxes) * K2 + (K2 - 1)
-        if packed_max >= 2**32:
-            raise TypeError(
-                f"composite join key ({j.stream_key},{j.stream_key2}) "
-                f"cannot pack into uint32: max_k1={max(k1_maxes)} * "
-                f"K2={K2} + {K2 - 1} = {packed_max} >= 2**32; "
-                "the generic composite strategy needs a wider pack")
+    k2_maxes = [m for m in (_stats_max(build, j.build_key2),
+                            _stats_max(stream, j.stream_key2))
+                if m is not None]
+    K2, packed_max = composite_pack_bound(
+        max(k1_maxes) if k1_maxes else None, k2_maxes)
+    if packed_max is not None and packed_max >= 2**32:
+        raise PlanInvariantError(
+            "key-pack",
+            f"composite join key ({j.stream_key},{j.stream_key2}) "
+            f"cannot pack into uint32: max_k1={max(k1_maxes)} * "
+            f"K2={K2} + {K2 - 1} = {packed_max} >= 2**32; "
+            "the generic composite strategy needs a wider pack",
+            node=j, pass_name="staging")
     return np.uint32(K2)

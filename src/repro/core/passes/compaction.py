@@ -46,6 +46,17 @@ priority order:
      base table use the measured 2-column range fraction
      (`Table.pair_frac`) instead of the textbook 0.5.
 
+Static analysis integration (PR 6).  Column provenance and base
+cardinalities come from the analysis layer (`core/analysis`): one
+`analyze()` pass per plan replaces the per-column recursive walks, and
+conjunctions of predicates over one base table are additionally measured
+jointly on a small fixed row sample (`Table.sample_index`) — conjunct
+independence overestimates the filtering power of correlated predicates
+(Q12's receipt/commit/ship date chain), and the planted capacity
+inherited that undershoot as overflow risk.  The measured joint fraction
+only ever *raises* the estimate (`max(product, measured)`), so
+capacities never shrink below what the independence model planned.
+
 Candidate sites are numbered in walk order whether or not a point is
 planted, so `point_id` survives re-planning even when decisions flip.
 """
@@ -54,8 +65,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
 from repro.core import ir
 from repro.core import expr as E
+from repro.core.analysis import analyze
 from repro.relational.loader import Database
 from repro.relational.schema import ColKind
 
@@ -81,6 +95,7 @@ class _Ctx:
     s: object                       # Settings
     est_params: dict                # runtime param name -> initial value
     observed: dict                  # point_id -> measured valid count
+    analysis: object = None         # analysis.Analysis of the input plan
     next_site: int = 0
 
     def site_id(self) -> str:
@@ -106,7 +121,8 @@ class Compaction:
         self.observed = dict(observed or {})
 
     def run(self, plan: ir.Plan, db: Database, settings) -> ir.Plan:
-        ctx = _Ctx(db, settings, self.est_params, self.observed)
+        ctx = _Ctx(db, settings, self.est_params, self.observed,
+                   analysis=analyze(plan, db))
         plan, _ = _walk(plan, ctx, heavy=False)
         return plan
 
@@ -125,35 +141,40 @@ def strip_compaction(plan: ir.Plan) -> ir.Plan:
 # the annotated walk: bottom-up cardinalities, top-down insertions
 # ---------------------------------------------------------------------------
 
-def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool) -> tuple[ir.Plan, Card]:
+def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool,
+          protect: bool = False) -> tuple[ir.Plan, Card]:
     """`heavy` marks subtrees consumed (transitively) by an operator whose
     per-row cost does not fuse away — sorts, segment reductions, generic
     join probes.  A pure elementwise+gather pipeline ending in a scalar
     aggregate fuses into a handful of XLA loops already; compacting it
-    trades fused passes for an unfused cumsum and loses."""
+    trades fused passes for an unfused cumsum and loses.
+
+    `protect` marks subtrees whose *physical frame* flows into a
+    positional (`pk_gather`/`bucket_gather`) build side: a gathering
+    compact there would re-pack rows and break the key-is-row-id
+    addressing (the verifier's positional-build-alignment rule).  It
+    follows the frame: through Select/Project/Compact/Limit children and
+    join streams; a dense Agg re-keys its output by domain index and a
+    Sort permutes anyway, so protection stops below both."""
     db, s = ctx.db, ctx.s
     if isinstance(p, ir.Scan):
-        t = db.table(p.table)
-        n = t.nrows
-        if p.date_slice is not None:
-            ds = p.date_slice
-            _, start, end = db.date_slice(p.table, ds.col, ds.lo, ds.hi)
-            n = max(end - start, 0)
+        n = ctx.analysis.info(p).card if ctx.analysis is not None \
+            else db.table(p.table).nrows
         return p, Card(n, float(n), False)
 
     if isinstance(p, ir.Select):
-        child, c = _walk(p.child, ctx, heavy)
+        child, c = _walk(p.child, ctx, heavy, protect)
         p.child = child
         sel = _selectivity(p.pred, p.child, ctx)
         return p, Card(c.phys, c.valid * sel, True)
 
     if isinstance(p, ir.Project):
-        child, c = _walk(p.child, ctx, heavy)
+        child, c = _walk(p.child, ctx, heavy, protect)
         p.child = child
         return p, c
 
     if isinstance(p, ir.Compact):   # pre-existing (hand-planted) point
-        child, c = _walk(p.child, ctx, heavy)
+        child, c = _walk(p.child, ctx, heavy, protect)
         p.child = child
         cap = int(p.capacity)
         if cap <= 0:                # measure-only: cardinality untouched
@@ -165,17 +186,23 @@ def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool) -> tuple[ir.Plan, Card]:
         # binary-search probe); the positional strategies are gathers that
         # fuse, so their streams compact only under a heavy ancestor
         sub_heavy = heavy or p.strategy == "generic"
-        stream, sc = _walk(p.stream, ctx, sub_heavy)
-        build, bc = _walk(p.build, ctx, sub_heavy)
+        positional = p.strategy in ("pk_gather", "bucket_gather")
+        # the join's output IS the stream's physical frame, so stream-side
+        # protection is inherited; the build frame feeds this join only,
+        # and must stay intact throughout when the join is positional
+        stream, sc = _walk(p.stream, ctx, sub_heavy, protect)
+        build, bc = _walk(p.build, ctx, sub_heavy, positional)
         # the build's match fraction must reflect its *pre-compaction*
         # cardinality: compaction shrinks phys toward valid, which would
         # inflate the fraction to ~1/margin and poison downstream estimates
         bfrac = min(bc.valid / bc.phys, 1.0) if bc.phys else 1.0
         if sub_heavy:
             stream, sc = _maybe_compact(stream, sc, ctx,
-                                        _RATIO_ELEMENTWISE)
+                                        _RATIO_ELEMENTWISE, protect)
         # positional strategies index the build by key value: never compact.
-        # The generic join argsorts the build; exists_flag scatters it.
+        # The generic join argsorts the build; exists_flag scatters it —
+        # either way the build frame is internal to the join (the output
+        # is the stream frame), so outer protection does not apply.
         if p.strategy in ("generic", "exists_flag"):
             ratio = _RATIO_SORT if p.strategy == "generic" \
                 else _RATIO_ELEMENTWISE
@@ -195,9 +222,11 @@ def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool) -> tuple[ir.Plan, Card]:
         # dense/generic aggregation segment-reduces (or sorts) per row —
         # heavy for everything below; a scalar aggregation is a terminal
         # one-pass consumer that reduces masked rows as cheaply as the
-        # compaction itself would run
+        # compaction itself would run.  The output frame is re-keyed
+        # (dense: by domain index) or re-packed (generic: sorted groups),
+        # so upstream protection does not extend below the Agg.
         agg_heavy = p.strategy != "scalar" and bool(p.group_by)
-        child, c = _walk(p.child, ctx, heavy or agg_heavy)
+        child, c = _walk(p.child, ctx, heavy or agg_heavy, False)
         if agg_heavy:
             ratio = _RATIO_SORT if p.strategy == "generic" \
                 else _RATIO_ELEMENTWISE
@@ -214,13 +243,13 @@ def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool) -> tuple[ir.Plan, Card]:
         return p, Card(c.phys, min(c.valid, float(c.phys)), True)
 
     if isinstance(p, ir.Sort):
-        child, c = _walk(p.child, ctx, True)
+        child, c = _walk(p.child, ctx, True, False)
         child, c = _maybe_compact(child, c, ctx, _RATIO_SORT)
         p.child = child
         return p, c
 
     if isinstance(p, ir.Limit):
-        child, c = _walk(p.child, ctx, heavy)
+        child, c = _walk(p.child, ctx, heavy, protect)
         p.child = child
         n = p.n if isinstance(p.n, int) else c.phys
         return p, Card(min(n, c.phys), min(c.valid, float(n)), c.masked)
@@ -233,8 +262,8 @@ def _bucket(est_rows: float, margin: float) -> int:
     return 1 << (want - 1).bit_length()
 
 
-def _maybe_compact(node: ir.Plan, card: Card, ctx: _Ctx,
-                   ratio: int) -> tuple[ir.Plan, Card]:
+def _maybe_compact(node: ir.Plan, card: Card, ctx: _Ctx, ratio: int,
+                   protect: bool = False) -> tuple[ir.Plan, Card]:
     """Plant a Compact over `node` if the planner expects the consumer to
     win at least `ratio`x in row count.  Returns the (possibly wrapped)
     node and the post-compaction cardinality.
@@ -254,8 +283,13 @@ def _maybe_compact(node: ir.Plan, card: Card, ctx: _Ctx,
         # candidate site (capacity 0 = no gather, frame unchanged), so a
         # single fallback execution hands the feedback store the exact
         # demand at every site — including those an overflowed upstream
-        # point would have truncated in the compacted program
+        # point would have truncated in the compacted program.  A
+        # measure-only point never re-packs rows, so `protect` is moot.
         return _wrap(node, 0, pid), card
+    if protect:
+        # this frame flows into a positional build side: a gathering
+        # compact here would break key-is-row-id addressing
+        return node, card
     obs = ctx.observed.get(pid)
     if obs is not None:
         # measured headroom: the bucket just above the observed count
@@ -284,12 +318,129 @@ def _wrap(node: ir.Plan, cap: int, pid: str) -> ir.Plan:
 # ---------------------------------------------------------------------------
 
 def _selectivity(e: E.Expr, plan: ir.Plan, ctx: _Ctx) -> float:
-    s = _sel(e, plan, ctx)
+    parts = E.conjuncts(e)
+    if len(parts) > 1:
+        s = _conjunction_sel(parts, plan, ctx)
+    else:
+        s = _sel(e, plan, ctx)
     return min(max(s, 0.0), 1.0)
 
 
+def _conjunction_sel(parts: list, plan: ir.Plan, ctx: _Ctx) -> float:
+    """Surviving fraction of a conjunction.
+
+    The independence product `∏ sel(cᵢ)` overestimates the filtering
+    power of correlated predicates (Q12's receiptdate/commitdate/shipdate
+    chain: each range is selective, but they fire together), and planted
+    capacities inherit the undershoot as overflow risk.  For groups of
+    conjuncts whose columns all resolve to ONE base table, the joint
+    fraction is instead *measured* on the table's fixed row sample; the
+    final estimate is `max(product, measured)` — the sample only ever
+    raises the estimate, so capacities never drop below what the
+    independence model planned (overflow-safe direction)."""
+    per = [_sel(c, plan, ctx) for c in parts]
+    indep = 1.0
+    for s in per:
+        indep *= s
+    groups: dict[int, tuple] = {}
+    for i, c in enumerate(parts):
+        tc = _conjunct_table(c, plan, ctx)
+        if tc is None:
+            continue
+        table, colmap = tc
+        t, idxs, cols = groups.setdefault(id(table), (table, [], {}))
+        idxs.append(i)
+        cols.update(colmap)
+    est = 1.0
+    covered: set[int] = set()
+    for table, idxs, colmap in groups.values():
+        if len(idxs) < 2:
+            continue   # a single conjunct gains nothing over its estimate
+        frac = _sample_frac(table, [parts[i] for i in idxs], colmap, ctx)
+        if frac is None:
+            continue
+        est *= frac
+        covered.update(idxs)
+    if not covered:
+        return indep
+    for i, s in enumerate(per):
+        if i not in covered:
+            est *= s
+    return max(indep, est)
+
+
+def _conjunct_table(e, plan, ctx: _Ctx):
+    """(Table, {plan name: base column}) when every column of `e`
+    resolves to the same base table — the condition for a row-aligned
+    joint sample evaluation."""
+    cols = E.expr_columns(e)
+    if not cols:
+        return None
+    table = None
+    colmap: dict[str, str] = {}
+    for name in cols:
+        tc = _base_column(plan, name, ctx)
+        if tc is None:
+            return None
+        t, cname = tc
+        if table is None:
+            table = t
+        elif t is not table:
+            return None
+        colmap[name] = cname
+    return table, colmap
+
+
+class _SampleEnv(E.EvalEnv):
+    """Predicate evaluation over one base table's fixed row sample,
+    resolving plan column names through the provenance map."""
+
+    def __init__(self, t, colmap: dict[str, str], params: dict):
+        super().__init__(np, cse=False, params=params)
+        self._t = t
+        self._colmap = colmap
+        self._idx = t.sample_index()
+
+    def _arr(self, name: str):
+        return self._t.data[self._colmap[name]][self._idx]
+
+    def get_num(self, name: str):
+        return self._arr(name)
+
+    def get_codes(self, name: str):
+        return self._arr(name)
+
+    def get_words(self, name: str):
+        return self._arr(name)
+
+    def get_chars(self, name: str):
+        return self._t.char_matrix(self._colmap[name])[self._idx]
+
+    def get_word_chars(self, name: str):
+        return self._t.char_matrix(self._colmap[name])[self._idx]
+
+
+def _sample_frac(t, exprs: list, colmap: dict[str, str],
+                 ctx: _Ctx) -> Optional[float]:
+    """Measured fraction of `t`'s row sample satisfying ALL of `exprs`
+    (None when any conjunct is un-evaluable — unbound Params, string
+    params — estimation falls back to the independence product)."""
+    env = _SampleEnv(t, colmap, ctx.est_params)
+    try:
+        mask = None
+        for e in exprs:
+            v = np.asarray(E.eval_expr(e, env))
+            if v.dtype != np.bool_ or v.ndim != 1:
+                return None
+            mask = v if mask is None else (mask & v)
+    except Exception:
+        return None
+    if mask is None or mask.shape[0] == 0:
+        return None
+    return float(np.count_nonzero(mask)) / mask.shape[0]
+
+
 def _sel(e, plan, ctx: _Ctx) -> float:
-    db = ctx.db
     if isinstance(e, E.And):
         return _sel(e.lhs, plan, ctx) * _sel(e.rhs, plan, ctx)
     if isinstance(e, E.Or):
@@ -306,7 +457,7 @@ def _sel(e, plan, ctx: _Ctx) -> float:
             lhs, rhs = rhs, lhs
             op = {"<": ">", "<=": ">=", ">": "<", ">=": "<="}.get(op, op)
         if isinstance(lhs, E.Col) and isinstance(rhs, E.Const):
-            return _range_sel(op, lhs.name, float(rhs.value), plan, db,
+            return _range_sel(op, lhs.name, float(rhs.value), plan, ctx,
                               quantile=False)
         if isinstance(lhs, E.Col) and isinstance(rhs, E.Param) \
                 and rhs.name in ctx.est_params:
@@ -315,9 +466,9 @@ def _sel(e, plan, ctx: _Ctx) -> float:
             # not exact — later bindings are covered by the overflow
             # feedback, so a distribution-aware guess beats 1.0)
             return _range_sel(op, lhs.name, float(ctx.est_params[rhs.name]),
-                              plan, db, quantile=True)
+                              plan, ctx, quantile=True)
         if isinstance(lhs, E.Col) and isinstance(rhs, E.Col):
-            pair = _pair_sel(op, lhs.name, rhs.name, plan, db)
+            pair = _pair_sel(op, lhs.name, rhs.name, plan, ctx)
             if pair is not None:
                 return pair    # measured 2-column range fraction
             if op in ("<", "<=", ">", ">="):
@@ -325,14 +476,14 @@ def _sel(e, plan, ctx: _Ctx) -> float:
         return 1.0         # unbound Param / computed lhs: no knowledge
 
     if isinstance(e, E.CodeEq):
-        nd = _n_distinct(e.col, plan, db)
+        nd = _n_distinct(e.col, plan, ctx)
         s = 1.0 / nd if nd else 0.1
         return 1.0 - s if e.negate else s
     if isinstance(e, E.CodeIn):
-        nd = _n_distinct(e.col, plan, db)
+        nd = _n_distinct(e.col, plan, ctx)
         return min(len(e.codes) / nd, 1.0) if nd else 0.3
     if isinstance(e, E.CodeRange):
-        nd = _n_distinct(e.col, plan, db)
+        nd = _n_distinct(e.col, plan, ctx)
         return min(max((e.hi - e.lo) / nd, 0.0), 1.0) if nd else 0.3
     if isinstance(e, (E.WordCode, E.StrContainsWord)):
         # word membership: no positional statistics; stay conservative
@@ -342,16 +493,16 @@ def _sel(e, plan, ctx: _Ctx) -> float:
     # un-lowered string predicates (string_dict off): same dictionary
     # statistics, evaluated against the char matrices at runtime
     if isinstance(e, E.StrEq):
-        nd = _n_distinct(e.col, plan, db)
+        nd = _n_distinct(e.col, plan, ctx)
         s = 1.0 / nd if nd and not isinstance(e.value, E.Param) else 1.0
         return 1.0 - s if e.negate else s
     if isinstance(e, E.StrIn):
-        nd = _n_distinct(e.col, plan, db)
+        nd = _n_distinct(e.col, plan, ctx)
         if nd and not any(isinstance(v, E.Param) for v in e.values):
             return min(len(e.values) / nd, 1.0)
         return 1.0
     if isinstance(e, E.StrStartsWith):
-        tc = _base_column(plan, e.col, db)
+        tc = _base_column(plan, e.col, ctx)
         if tc is not None and not isinstance(e.prefix, E.Param):
             t, name = tc
             if name in t.vocabs:
@@ -362,9 +513,9 @@ def _sel(e, plan, ctx: _Ctx) -> float:
     return 1.0             # Where / arithmetic / unknown: assume nothing
 
 
-def _range_sel(op: str, name: str, v: float, plan: ir.Plan, db: Database,
+def _range_sel(op: str, name: str, v: float, plan: ir.Plan, ctx: _Ctx,
                quantile: bool = False) -> float:
-    tc = _base_column(plan, name, db)
+    tc = _base_column(plan, name, ctx)
     if tc is None:
         return 1.0
     t, cname = tc
@@ -394,20 +545,20 @@ def _range_sel(op: str, name: str, v: float, plan: ir.Plan, db: Database,
     return min(max((hi - v) / span, 0.0), 1.0)     # > / >=
 
 
-def _pair_sel(op: str, a: str, b: str, plan: ir.Plan, db: Database
+def _pair_sel(op: str, a: str, b: str, plan: ir.Plan, ctx: _Ctx
               ) -> Optional[float]:
     """Measured fraction for `a op b` when both columns resolve to the
     SAME base table (row-aligned compare is only meaningful there)."""
     if op not in ("<", "<=", ">", ">=", "==", "!="):
         return None
-    ta, tb = _base_column(plan, a, db), _base_column(plan, b, db)
+    ta, tb = _base_column(plan, a, ctx), _base_column(plan, b, ctx)
     if ta is None or tb is None or ta[0] is not tb[0]:
         return None
     return ta[0].pair_frac(ta[1], op, tb[1])
 
 
-def _n_distinct(name: str, plan: ir.Plan, db: Database) -> Optional[int]:
-    tc = _base_column(plan, name, db)
+def _n_distinct(name: str, plan: ir.Plan, ctx: _Ctx) -> Optional[int]:
+    tc = _base_column(plan, name, ctx)
     if tc is None:
         return None
     t, cname = tc
@@ -415,27 +566,11 @@ def _n_distinct(name: str, plan: ir.Plan, db: Database) -> Optional[int]:
     return st.n_distinct if st is not None and st.n_distinct else None
 
 
-def _base_column(p: ir.Plan, name: str, db: Database):
-    """(Table, column) provenance of a (possibly renamed) base column."""
-    if isinstance(p, ir.Scan):
-        t = db.table(p.table)
-        return (t, name) if t.schema.has_col(name) else None
-    if isinstance(p, (ir.Select, ir.Sort, ir.Limit, ir.Compact)):
-        return _base_column(p.child, name, db)
-    if isinstance(p, ir.Project):
-        if name in p.outputs:
-            e = p.outputs[name]
-            if isinstance(e, E.Col):
-                return _base_column(p.child, e.name, db)
-            return None
-        return _base_column(p.child, name, db) if p.keep_input else None
-    if isinstance(p, ir.Join):
-        got = _base_column(p.stream, name, db)
-        if got is None and p.kind in ("inner", "left"):
-            got = _base_column(p.build, name, db)
-        return got
-    if isinstance(p, ir.Agg):
-        if name in p.group_by or name in p.carry:
-            return _base_column(p.child, name, db)
+def _base_column(p: ir.Plan, name: str, ctx: _Ctx):
+    """(Table, column) provenance of a (possibly renamed) base column,
+    answered by the analysis layer's schema inference (one bottom-up pass
+    shared by every estimate in this plan)."""
+    ci = ctx.analysis.col(p, name) if ctx.analysis is not None else None
+    if ci is None or ci.table is None:
         return None
-    return None
+    return ctx.db.table(ci.table), ci.col

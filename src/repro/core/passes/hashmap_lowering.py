@@ -14,35 +14,43 @@ collected at load time:
     accumulator is a statically-shaped zero buffer);
   * otherwise                        -> 'generic' sort-based grouping.
 
-Domains come from: CAT dictionary sizes, dense PK/FK ranges, integer stats,
-or explicit statistics hints (`Agg.domain_hints`, §3.5.2).
+Domains come from the analysis layer's per-column `ColInfo.domain` (CAT
+dictionary sizes, dense PK/FK ranges, integer stats) or explicit
+statistics hints (`Agg.domain_hints`, §3.5.2); one `analyze()` pass serves
+every Agg in the plan.
 """
 from __future__ import annotations
 
 from repro.core import ir
-from repro.core.passes.provenance import col_domain, col_kind
+from repro.core.analysis import analyze
 from repro.relational.loader import Database
-from repro.relational.schema import ColKind
 
 
 class HashMapLowering:
     name = "HashMapLowering"
 
     def run(self, plan: ir.Plan, db: Database, settings) -> ir.Plan:
+        a = analyze(plan, db)
         for node in ir.walk(plan):
             if not isinstance(node, ir.Agg) or node.strategy != "generic":
                 continue
             if not node.group_by:
                 node.strategy = "scalar"
                 continue
+            child = a.schema(node.child)
             # Without string dictionaries a CAT key has no integer code
             # domain — the dictionary IS the domain knowledge (§3.4/§3.2.2).
             if not settings.string_dict and any(
-                    col_kind(node.child, g, db) == ColKind.CAT
-                    for g in node.group_by):
+                    ci is not None and ci.dtype == "code"
+                    for ci in (child.get(g) for g in node.group_by)):
                 continue
-            domains = [col_domain(node.child, g, db, node.domain_hints)
-                       for g in node.group_by]
+            domains = []
+            for g in node.group_by:
+                d = node.domain_hints.get(g)
+                if d is None:
+                    ci = child.get(g)
+                    d = ci.domain if ci is not None else None
+                domains.append(d)
             if all(d is not None for d in domains):
                 total = 1
                 for d in domains:

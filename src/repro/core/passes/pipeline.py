@@ -64,6 +64,14 @@ class Settings:
     # an overflowed point is truncated, and re-planning from truncated
     # counts converges one layer per k overflows instead of in one step.
     compact_measure_only: bool = False
+    # --- static analysis / verification (core/analysis) -----------------------
+    # run the inter-pass verifier on the input plan and after every pass:
+    # a well-formedness violation raises PlanInvariantError naming the
+    # offending pass (pass bisection for free).  On by default — the check
+    # is a few plan walks per optimize, which only runs at compile time;
+    # latency-critical serving paths that re-optimize per plan shape can
+    # switch it off (dataclasses.replace(settings, verify_passes=False)).
+    verify_passes: bool = True
 
 
 class Pass(Protocol):
@@ -121,8 +129,20 @@ def optimize(plan: ir.Plan, db, settings: Settings,
              bindings: dict | None = None,
              est_params: dict | None = None,
              observed: dict | None = None) -> ir.Plan:
-    for p in build_pipeline(settings, bindings, est_params, observed):
+    pipeline = build_pipeline(settings, bindings, est_params, observed)
+    if not settings.verify_passes:
+        for p in pipeline:
+            plan = p.run(plan, db, settings)
+        return plan
+    from repro.core.analysis.verify import verify_plan
+
+    # verify the hand-written input too (pass_name 'input'), then after
+    # each pass; final-only rules (e.g. key-pack) run after the last one
+    verify_plan(plan, db, settings, pass_name="input", final=False)
+    last = len(pipeline) - 1
+    for i, p in enumerate(pipeline):
         plan = p.run(plan, db, settings)
+        verify_plan(plan, db, settings, pass_name=p.name, final=(i == last))
     return plan
 
 

@@ -1,16 +1,18 @@
-"""Column provenance analysis shared by the specialization passes.
+"""Column provenance queries shared by the specialization passes.
 
-The paper's data-structure specializations all rest on *schema + statistics
-knowledge*: which table a column's values range over (PK/FK declarations)
-and how large a group key's domain is (load-time stats).  These two queries
-are answered here by walking the plan.
+The paper's data-structure specializations all rest on *schema +
+statistics knowledge*: which table a column's values range over (PK/FK
+declarations) and how large a group key's domain is (load-time stats).
+Since PR 6 that knowledge is computed by the static-analysis layer
+(`core/analysis/schema.py`) in one bottom-up pass; these wrappers keep
+the historical per-column query API for the passes' call sites.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 from repro.core import ir
-from repro.core.expr import Col
+from repro.core.analysis.schema import schema_of
 from repro.relational.loader import Database
 from repro.relational.schema import ColKind
 
@@ -18,56 +20,16 @@ from repro.relational.schema import ColKind
 def key_parent_table(p: ir.Plan, name: str, db: Database) -> Optional[str]:
     """Table T such that values of column `name` lie in [0, |T|) and index
     T's dense primary key — i.e. `name` is T's PK or a FK referencing T."""
-    if isinstance(p, ir.Scan):
-        sch = db.table(p.table).schema
-        if not sch.has_col(name):
-            return None
-        if sch.primary_key == (name,):
-            return p.table
-        fk = sch.fk_for(name)
-        return fk.ref_table if fk else None
-    if isinstance(p, (ir.Select, ir.Sort, ir.Limit, ir.Compact)):
-        return key_parent_table(p.child, name, db)
-    if isinstance(p, ir.Project):
-        if name in p.outputs:
-            e = p.outputs[name]
-            if isinstance(e, Col):
-                return key_parent_table(p.child, e.name, db)
-            return None
-        return key_parent_table(p.child, name, db) if p.keep_input else None
-    if isinstance(p, ir.Join):
-        return (key_parent_table(p.stream, name, db)
-                or (key_parent_table(p.build, name, db)
-                    if p.kind in ("inner", "left") else None))
-    if isinstance(p, ir.Agg):
-        if name in p.group_by or name in p.carry:
-            return key_parent_table(p.child, name, db)
-        return None
-    return None
+    ci = schema_of(p, db).get(name)
+    return ci.parent if ci is not None else None
 
 
 def col_kind(p: ir.Plan, name: str, db: Database) -> Optional[ColKind]:
     """Schema kind of a (possibly renamed) column, if it is a base column."""
-    if isinstance(p, ir.Scan):
-        sch = db.table(p.table).schema
-        return sch.col(name).kind if sch.has_col(name) else None
-    if isinstance(p, (ir.Select, ir.Sort, ir.Limit, ir.Compact)):
-        return col_kind(p.child, name, db)
-    if isinstance(p, ir.Project):
-        if name in p.outputs:
-            e = p.outputs[name]
-            return col_kind(p.child, e.name, db) if isinstance(e, Col) else None
-        return col_kind(p.child, name, db) if p.keep_input else None
-    if isinstance(p, ir.Join):
-        k = col_kind(p.stream, name, db)
-        if k is None and p.kind in ("inner", "left"):
-            k = col_kind(p.build, name, db)
-        return k
-    if isinstance(p, ir.Agg):
-        if name in p.group_by or name in p.carry:
-            return col_kind(p.child, name, db)
+    ci = schema_of(p, db).get(name)
+    if ci is None or ci.table is None:
         return None
-    return None
+    return db.table(ci.table).schema.col(ci.col).kind
 
 
 def col_domain(p: ir.Plan, name: str, db: Database,
@@ -75,38 +37,5 @@ def col_domain(p: ir.Plan, name: str, db: Database,
     """Static key-domain size for a column, if known (for dense lowering)."""
     if hints and name in hints:
         return hints[name]
-    if isinstance(p, ir.Scan):
-        t = db.table(p.table)
-        sch = t.schema
-        if not sch.has_col(name):
-            return None
-        cdef = sch.col(name)
-        if cdef.kind == ColKind.CAT:
-            return len(t.vocabs[name])
-        if cdef.kind == ColKind.INT:
-            parent = key_parent_table(p, name, db)
-            if parent is not None:
-                return db.table(parent).nrows
-            st = t.stats[name]
-            if st.min >= 0 and st.max < (1 << 20):
-                return int(st.max) + 1
-        return None
-    if isinstance(p, (ir.Select, ir.Sort, ir.Limit, ir.Compact)):
-        return col_domain(p.child, name, db, hints)
-    if isinstance(p, ir.Project):
-        if name in p.outputs:
-            e = p.outputs[name]
-            if isinstance(e, Col):
-                return col_domain(p.child, e.name, db, hints)
-            return None
-        return col_domain(p.child, name, db, hints) if p.keep_input else None
-    if isinstance(p, ir.Join):
-        d = col_domain(p.stream, name, db, hints)
-        if d is None and p.kind in ("inner", "left"):
-            d = col_domain(p.build, name, db, hints)
-        return d
-    if isinstance(p, ir.Agg):
-        if name in p.group_by or name in p.carry:
-            return col_domain(p.child, name, db, hints)
-        return None
-    return None
+    ci = schema_of(p, db).get(name)
+    return ci.domain if ci is not None else None

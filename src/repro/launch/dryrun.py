@@ -27,7 +27,7 @@ from repro.launch import specs as SP                             # noqa: E402
 from repro.models.config import SHAPES                           # noqa: E402
 from repro.models.transformer import decode_step, prefill        # noqa: E402
 from repro.train.optimizer import AdamConfig                     # noqa: E402
-from repro.train.train_step import make_train_state, train_step  # noqa: E402
+from repro.train.train_step import train_step  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P       # noqa: E402
 
 

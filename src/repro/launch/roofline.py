@@ -14,7 +14,6 @@ all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
 from __future__ import annotations
 
 import re
-from typing import Optional
 
 PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e-class target)
 HBM_BW = 819e9             # bytes/s per chip

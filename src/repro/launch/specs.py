@@ -6,7 +6,6 @@ dry-run lowers/compiles against them.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

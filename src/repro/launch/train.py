@@ -12,7 +12,6 @@ async checkpointing and the deterministic pipeline.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ hillclimb item).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

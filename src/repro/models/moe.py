@@ -15,7 +15,6 @@ the MoE-bound cells (see EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

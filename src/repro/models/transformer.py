@@ -12,12 +12,10 @@ state caches), decode (single token + cache update).  Remat
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import attention as A
 from repro.models import moe as MOE

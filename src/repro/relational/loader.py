@@ -51,6 +51,7 @@ class Database:
         self.tables = tables
         self._fk_csr: dict[tuple[str, str], tuple[np.ndarray, np.ndarray]] = {}
         self._date_cluster: dict[tuple[str, str], tuple[np.ndarray, np.ndarray]] = {}
+        self._slice_bounds: dict[tuple, tuple[int, int]] = {}
         self._device_cols: dict[tuple, object] = {}
 
     # -- construction -------------------------------------------------------
@@ -128,9 +129,15 @@ class Database:
         lo <= date < hi.  Resolved at staging time (host-side binary search),
         so the compiled query carries no date comparison at all."""
         perm, sdates = self.date_cluster(table, col)
-        start = 0 if lo is None else int(np.searchsorted(sdates, lo, side="left"))
-        end = len(sdates) if hi is None else int(np.searchsorted(sdates, hi, side="left"))
-        return perm, start, end
+        key = (table, col, lo, hi)
+        bounds = self._slice_bounds.get(key)
+        if bounds is None:
+            # cached: the analysis layer re-derives slice cardinalities on
+            # every optimize, and the binary search dominates its profile
+            start = 0 if lo is None else int(np.searchsorted(sdates, lo, side="left"))
+            end = len(sdates) if hi is None else int(np.searchsorted(sdates, hi, side="left"))
+            bounds = self._slice_bounds[key] = (start, end)
+        return perm, bounds[0], bounds[1]
 
     # -- memory accounting (Fig 20) -------------------------------------------
     def base_nbytes(self) -> int:
@@ -149,6 +156,7 @@ class Database:
     def reset_aux(self) -> None:
         self._fk_csr.clear()
         self._date_cluster.clear()
+        self._slice_bounds.clear()
         for t in self.tables.values():
             t._char_cache.clear()
 

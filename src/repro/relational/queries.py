@@ -12,7 +12,7 @@ feature: correlated sub-queries are rewritten the same way Q17/Q18 are).
 """
 from __future__ import annotations
 
-from repro.core.expr import (And, Arith, Cmp, Col, Const, Not, Or, Param,
+from repro.core.expr import (And, Arith, Cmp, Not, Or, Param,
                              StrContainsWord, StrEq, StrIn, StrStartsWith,
                              Where, Year, col, lit)
 from repro.core.ir import Agg, AggSpec, Join, Limit, Plan, Project, Scan, Select, Sort

@@ -51,6 +51,11 @@ class Table:
     _quantile_cache: dict[str, np.ndarray] = dataclasses.field(
         default_factory=dict)
     _pair_cache: dict[tuple, float] = dataclasses.field(default_factory=dict)
+    _sample_cache: Optional[np.ndarray] = None
+    # analysis-layer base ColInfo per column, validated against the stats
+    # values on every hit (tests mutate `stats` in place): name ->
+    # (stats signature, ColInfo).  Populated by analysis/schema.py.
+    _colinfo_cache: dict[str, tuple] = dataclasses.field(default_factory=dict)
 
     @property
     def name(self) -> str:
@@ -130,6 +135,23 @@ class Table:
                 got = float(np.count_nonzero(cmp(x, y))) / x.size
             self._pair_cache[key] = got
         return got
+
+    SAMPLE_ROWS = 2048
+
+    def sample_index(self) -> np.ndarray:
+        """Sorted row sample (≤ SAMPLE_ROWS rows) for joint-predicate
+        selectivity measurement (compaction's conjunction clamp).  Fixed
+        seed: capacity planning must be deterministic across processes and
+        across the plan cache's capacity-signature runs."""
+        if self._sample_cache is None:
+            if self.nrows <= self.SAMPLE_ROWS:
+                idx = np.arange(self.nrows)
+            else:
+                rng = np.random.default_rng(0x5EED)
+                idx = rng.choice(self.nrows, self.SAMPLE_ROWS, replace=False)
+                idx.sort()
+            self._sample_cache = idx
+        return self._sample_cache
 
     # -- un-optimized (no string dictionary) physical representation -------
     def char_matrix(self, name: str) -> np.ndarray:

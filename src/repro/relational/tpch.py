@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.relational import schema as S
-from repro.relational.table import Table, pad_words
+from repro.relational.table import Table
 
 EPOCH = np.datetime64("1970-01-01", "D")
 DATE_LO = int(np.datetime64("1992-01-01", "D").astype(np.int64))

@@ -14,7 +14,7 @@ in an event loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.sharding import Ctx
-from repro.models.transformer import decode_step, init_cache, prefill
+from repro.models.transformer import decode_step, init_cache
 
 
 @dataclasses.dataclass

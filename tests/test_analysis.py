@@ -1,0 +1,207 @@
+"""Schema & property inference (core/analysis): dtype/provenance facts,
+derived cardinality/alignment properties, memoization, and the overhead
+bound the ISSUE acceptance criteria pin down."""
+import dataclasses
+import time
+
+import pytest
+
+from repro.core import VolcanoEngine, ir, preset
+from repro.core.analysis import (ColInfo, SchemaError, analyze,
+                                 base_colinfo, composite_pack_bound,
+                                 schema_of)
+from repro.core.expr import Arith, Cmp, col, lit
+from repro.core.passes.pipeline import optimize
+from repro.relational.queries import QUERIES
+
+
+# ---------------------------------------------------------------------------
+# schema inference
+# ---------------------------------------------------------------------------
+
+def test_root_schema_matches_volcano_output_columns(db):
+    eng = VolcanoEngine(db)
+    for qname in ["q1", "q3", "q6", "q7", "q12", "q14"]:
+        plan = QUERIES[qname]()
+        sch = schema_of(plan, db)
+        got = eng.execute(QUERIES[qname]())
+        assert set(got) <= set(sch), (
+            f"{qname}: Volcano emits {set(got) - set(sch)} outside the "
+            "inferred schema")
+
+
+def test_base_column_facts(db):
+    sch = schema_of(ir.Scan("lineitem"), db)
+    assert sch["l_quantity"].dtype == "float"
+    assert sch["l_shipdate"].dtype == "date"
+    assert sch["l_shipmode"].dtype == "code"
+    assert sch["l_comment"].dtype == "string" if "l_comment" in sch else True
+    # FK provenance: l_orderkey indexes orders' dense PK
+    assert sch["l_orderkey"].parent == "orders"
+    assert sch["l_orderkey"].domain == db.table("orders").nrows
+    # CAT domain is the vocabulary size
+    assert sch["l_shipmode"].domain == len(db.table("lineitem").vocabs["l_shipmode"])
+    # PK of a single-key table is its own parent
+    osch = schema_of(ir.Scan("orders"), db)
+    assert osch["o_orderkey"].parent == "orders"
+
+
+def test_rename_inherits_provenance(db):
+    p = ir.Project(ir.Scan("nation"), {"n1_key": col("n_nationkey")},
+                   keep_input=False)
+    sch = schema_of(p, db)
+    assert set(sch) == {"n1_key"}
+    assert sch["n1_key"].parent == "nation"
+    assert sch["n1_key"].table == "nation" and sch["n1_key"].col == "n_nationkey"
+
+
+def test_computed_output_dtype(db):
+    p = ir.Project(ir.Scan("lineitem"),
+                   {"rev": Arith("*", col("l_extendedprice"),
+                                 col("l_discount")),
+                    "cnt": Arith("+", col("l_linenumber"), lit(1))},
+                   keep_input=False)
+    sch = schema_of(p, db)
+    assert sch["rev"].dtype == "float" and sch["rev"].table is None
+    assert sch["cnt"].dtype == "int"
+
+
+def test_dangling_column_raises_schema_error(db):
+    p = ir.Project(ir.Scan("orders"), {"x": col("no_such_col")})
+    with pytest.raises(SchemaError):
+        schema_of(p, db)
+    with pytest.raises(SchemaError):
+        schema_of(ir.Scan("orders", columns=["o_orderkey", "bogus"]), db)
+
+
+def test_join_schema_union_and_semi(db):
+    li, o = ir.Scan("lineitem"), ir.Scan("orders")
+    inner = ir.Join(li, o, "l_orderkey", "o_orderkey")
+    sch = schema_of(inner, db)
+    assert "o_orderdate" in sch and "l_quantity" in sch
+    semi = ir.Join(ir.Scan("lineitem"), ir.Scan("orders"),
+                   "l_orderkey", "o_orderkey", kind="semi")
+    sch = schema_of(semi, db)
+    assert "o_orderdate" not in sch and "l_quantity" in sch
+
+
+# ---------------------------------------------------------------------------
+# derived properties
+# ---------------------------------------------------------------------------
+
+def test_scan_properties(db):
+    a = analyze(ir.Scan("lineitem"), db)
+    info = a.info(a.plan)
+    assert info.card == db.table("lineitem").nrows
+    assert info.aligned == "lineitem"
+    sliced = ir.Scan("lineitem",
+                     date_slice=ir.DateSlice("l_shipdate", 9000, 9400))
+    info = analyze(sliced, db).info(sliced)
+    assert 0 < info.card < db.table("lineitem").nrows
+    assert info.aligned is None           # slice re-packs rows
+    assert info.clustered_by == "l_shipdate"
+    assert info.sorted_by == (("l_shipdate", True),)
+
+
+def test_select_keeps_compact_kills_alignment(db):
+    sel = ir.Select(ir.Scan("orders"), Cmp("<", col("o_totalprice"),
+                                           lit(1000.0)))
+    a = analyze(sel, db)
+    assert a.info(sel).aligned == "orders"
+    cap = ir.Compact(ir.Select(ir.Scan("orders"),
+                               Cmp("<", col("o_totalprice"), lit(1000.0))),
+                     2048)
+    a = analyze(cap, db)
+    assert a.info(cap).aligned is None
+    assert a.info(cap).card == 2048
+    measure = ir.Compact(ir.Scan("orders"), 0)   # measure-only point
+    a = analyze(measure, db)
+    assert a.info(measure).aligned == "orders"
+
+
+def test_limit_sort_agg_cards(db):
+    agg = ir.Agg(ir.Scan("lineitem"), ["l_returnflag"],
+                 [ir.AggSpec("n", "count")])
+    srt = ir.Sort(agg, [("l_returnflag", True)])
+    lim = ir.Limit(srt, 2)
+    a = analyze(lim, db)
+    assert a.info(lim).card == 2
+    assert a.info(srt).sorted_by == (("l_returnflag", True),)
+    scalar = ir.Agg(ir.Scan("lineitem"), [], [ir.AggSpec("n", "count")])
+    assert analyze(scalar, db).info(scalar).card == 1
+
+
+def test_join_inherits_stream_properties(db):
+    li = ir.Scan("lineitem")
+    j = ir.Join(li, ir.Scan("orders"), "l_orderkey", "o_orderkey")
+    a = analyze(j, db)
+    assert a.info(j).card == db.table("lineitem").nrows
+    assert a.info(j).aligned == "lineitem"
+
+
+def test_memoization_single_visit(db):
+    plan = QUERIES["q3"]()
+    a = analyze(plan, db)
+    first = {id(n): a.info(n) for n in ir.walk(plan)}
+    again = {id(n): a.info(n) for n in ir.walk(plan)}
+    for k in first:
+        assert first[k] is again[k]       # same NodeInfo object: memoized
+
+
+def test_base_colinfo_cache_revalidates_on_stats_mutation(db):
+    ci = base_colinfo("orders", "o_orderkey", db)
+    st = db.table("orders").stats["o_orderkey"]
+    old = st.max
+    try:
+        st.max = old + 12345
+        ci2 = base_colinfo("orders", "o_orderkey", db)
+        assert ci2.hi == old + 12345      # cache did not serve stale stats
+        assert ci2 is not ci
+    finally:
+        st.max = old
+    ci3 = base_colinfo("orders", "o_orderkey", db)
+    assert ci3.hi == old
+
+
+def test_composite_pack_bound():
+    K2, packed = composite_pack_bound(100, [9, 7])
+    assert K2 == 10 and packed == 100 * 10 + 9
+    K2, packed = composite_pack_bound(None, [9])
+    assert K2 == 10 and packed is None
+    K2, packed = composite_pack_bound(5, [])
+    assert K2 == 1 << 20 and packed == 5 * K2 + (K2 - 1)
+
+
+def test_colinfo_is_immutable():
+    ci = ColInfo("int", "orders", "o_orderkey")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ci.dtype = "float"
+
+
+# ---------------------------------------------------------------------------
+# overhead bound (ISSUE acceptance: analysis <= 5% of optimize on q1..q19)
+# ---------------------------------------------------------------------------
+
+def test_analysis_overhead_bound(db):
+    s_on = preset("opt")
+    s_off = dataclasses.replace(s_on, verify_passes=False)
+    for fn in QUERIES.values():                     # warm caches/sketches
+        optimize(fn(), db, s_on)
+
+    def best(f, r=5):
+        times = []
+        for _ in range(r):
+            t0 = time.perf_counter()
+            f()
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    t_opt = best(lambda: [optimize(fn(), db, s_on)
+                          for fn in QUERIES.values()])
+    finals = [optimize(fn(), db, s_off) for fn in QUERIES.values()]
+    t_an = best(lambda: [analyze(p, db) for p in finals])
+    # one full analysis pass over every query's final plan costs <= 5% of
+    # the default (shipped, verifier-on) optimize sweep
+    assert t_an <= 0.05 * t_opt, (
+        f"analysis {t_an * 1e3:.2f}ms vs optimize {t_opt * 1e3:.2f}ms "
+        f"({100 * t_an / t_opt:.1f}% > 5%)")

@@ -7,7 +7,6 @@ import pytest
 
 from repro.configs import ARCHS, get_config, smoke_config
 from repro.models import Ctx, decode_step, forward_train, init_cache, init_params
-from repro.models.config import SHAPES
 
 CTX = Ctx(mesh=None)
 

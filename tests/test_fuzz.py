@@ -1,0 +1,48 @@
+"""Plan fuzzer (analysis/fuzz.py): seeded random plans must be
+verifier-clean at every ladder rung and compiled execution must match the
+Volcano oracle.  The fast tier runs a small sample; the nightly CI runs
+`python -m repro.core.analysis.fuzz --n 200` (and `-m slow` here)."""
+import numpy as np
+import pytest
+
+from repro.core import ir
+from repro.core.analysis.fuzz import random_plan, run_fuzz
+
+
+def test_random_plans_are_deterministic(db):
+    a = ir.plan_repr(random_plan(np.random.default_rng(7), db))
+    b = ir.plan_repr(random_plan(np.random.default_rng(7), db))
+    assert a == b
+
+
+def test_random_plans_cover_the_shapes(db):
+    kinds = set()
+    for seed in range(60):
+        plan = random_plan(np.random.default_rng(seed), db)
+        for n in ir.walk(plan):
+            kinds.add(type(n).__name__)
+            if isinstance(n, ir.Join):
+                kinds.add(f"join:{n.kind}")
+                if n.stream_key2:
+                    kinds.add("join:composite")
+    assert {"Scan", "Select", "Join", "Agg", "Sort", "Project"} <= kinds
+    assert {"join:inner", "join:composite"} <= kinds
+    assert {"join:semi", "join:anti"} & kinds
+
+
+def test_fuzz_optimize_clean_across_ladder(db):
+    rep = run_fuzz(db, n=40, compile_every=0)    # optimize-only, all rungs
+    assert rep.n_plans == 40
+    assert rep.ok, rep.failures[:3]
+
+
+def test_fuzz_compiled_matches_oracle(db):
+    rep = run_fuzz(db, n=5, presets=["opt"], compile_presets=["naive", "opt"])
+    assert rep.n_compiled == 10
+    assert rep.ok, rep.failures[:3]
+
+
+@pytest.mark.slow
+def test_fuzz_large(db):
+    rep = run_fuzz(db, n=200, compile_every=4)
+    assert rep.ok, rep.failures[:5]

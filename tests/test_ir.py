@@ -1,0 +1,98 @@
+"""Plan IR structural helpers: children/replace_children/walk must agree
+on every node type (the analysis layer and every pass traverse through
+them), and plan_repr must surface the physical annotations."""
+import pytest
+
+from repro.core import ir, preset
+from repro.core.expr import Cmp, col, lit
+from repro.core.passes.pipeline import optimize
+from repro.relational.queries import QUERIES
+
+
+def _nodes():
+    scan = ir.Scan("lineitem")
+    scan2 = ir.Scan("orders")
+    sel = ir.Select(scan, Cmp("<", col("l_quantity"), lit(24.0)))
+    proj = ir.Project(scan, {"q": col("l_quantity")}, keep_input=False)
+    join = ir.Join(scan, scan2, "l_orderkey", "o_orderkey")
+    agg = ir.Agg(scan, ["l_returnflag"], [ir.AggSpec("n", "count")])
+    compact = ir.Compact(scan, 1024)
+    sort = ir.Sort(scan, [("l_quantity", True)])
+    limit = ir.Limit(sort, 5)
+    return {
+        "Scan": (scan, []),
+        "Select": (sel, [scan]),
+        "Project": (proj, [scan]),
+        "Join": (join, [scan, scan2]),
+        "Agg": (agg, [scan]),
+        "Compact": (compact, [scan]),
+        "Sort": (sort, [scan]),
+        "Limit": (limit, [sort]),
+    }
+
+
+@pytest.mark.parametrize("name", list(_nodes()))
+def test_children_per_node_type(name):
+    node, kids = _nodes()[name]
+    assert ir.children(node) == kids
+
+
+@pytest.mark.parametrize("name", list(_nodes()))
+def test_replace_children_round_trips(name):
+    node, kids = _nodes()[name]
+    fresh = [ir.Scan("part") for _ in kids]
+    ir.replace_children(node, fresh)
+    assert ir.children(node) == fresh
+    ir.replace_children(node, kids)
+    assert ir.children(node) == kids
+
+
+def test_join_replace_children_order():
+    stream, build = ir.Scan("lineitem"), ir.Scan("orders")
+    j = ir.Join(stream, build, "l_orderkey", "o_orderkey")
+    s2, b2 = ir.Scan("partsupp"), ir.Scan("part")
+    ir.replace_children(j, [s2, b2])
+    assert j.stream is s2 and j.build is b2
+
+
+def test_walk_is_preorder_and_complete():
+    nodes = _nodes()
+    limit = nodes["Limit"][0]
+    got = list(ir.walk(limit))
+    assert got[0] is limit
+    assert [type(n).__name__ for n in got] == ["Limit", "Sort", "Scan"]
+    join = nodes["Join"][0]
+    got = list(ir.walk(join))
+    assert got[0] is join
+    assert got[1] is join.stream and got[2] is join.build
+
+
+def test_walk_visits_every_node_of_real_plans():
+    for fn in QUERIES.values():
+        plan = fn()
+        seen = list(ir.walk(plan))
+        # every child of every visited node is itself visited
+        ids = {id(n) for n in seen}
+        for n in seen:
+            for c in ir.children(n):
+                assert id(c) in ids
+
+
+def test_plan_repr_shows_physical_annotations(db):
+    plan = optimize(QUERIES["q3"](), db, preset("opt"))
+    rep = ir.plan_repr(plan)
+    assert "pk_gather" in rep
+    assert "build_table=" in rep
+    assert "date_slice[" in rep and ".." in rep
+    assert "cols=[" in rep            # pruned column lists, not counts
+    assert "Compact(cap=" in rep and "point=c" in rep
+
+
+def test_plan_repr_composite_and_domains(db):
+    plan = optimize(QUERIES["q9full"](), db, preset("opt"))
+    rep = ir.plan_repr(plan)
+    assert "l_suppkey=ps_suppkey" in rep      # second key pair shown
+    assert "bucket_width=" in rep
+    plan = optimize(QUERIES["q1"](), db, preset("opt"))
+    rep = ir.plan_repr(plan)
+    assert "domains=" in rep                  # dense agg planned domains

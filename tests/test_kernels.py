@@ -1,6 +1,5 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
 swept over shapes/dtypes/group counts, plus hypothesis property tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -2,7 +2,6 @@
 per-query specialized input sets, and a property test driving random
 queries through both engines."""
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings as hsettings, strategies as st
@@ -11,9 +10,8 @@ except ImportError:   # degrade gracefully: property tests skip, rest run
 
 from repro.core import CompiledQuery, VolcanoEngine, optimize, preset
 from repro.core import ir
-from repro.core.expr import (And, Arith, Cmp, CodeIn, CodeRange, Col, Const,
-                             StrIn, col, lit)
-from repro.core.ir import Agg, AggSpec, Join, Scan, Select
+from repro.core.expr import (And, Arith, Cmp, CodeRange, StrIn, col, lit)
+from repro.core.ir import Agg, AggSpec, Scan, Select
 from repro.relational.queries import QUERIES, q12
 
 

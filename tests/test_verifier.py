@@ -1,0 +1,181 @@
+"""Inter-pass verifier: clean on every real workload, and mutation tests
+proving a deliberately broken plan/pass is caught with correct pass
+attribution (the ISSUE acceptance criteria)."""
+import dataclasses
+
+import pytest
+
+from repro.core import ir, preset
+from repro.core.analysis import PlanInvariantError, check_plan, verify_plan
+from repro.core.expr import Cmp, Param, col, lit
+from repro.core.passes import pipeline as pipeline_mod
+from repro.core.passes.pipeline import LADDER, optimize
+from repro.relational.queries import PARAM_QUERIES, QUERIES
+
+
+# ---------------------------------------------------------------------------
+# zero violations on everything that exists
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("config", LADDER + ["opt-pallas"])
+def test_all_queries_verify_clean(db, config):
+    s = preset(config)
+    assert s.verify_passes        # default-on everywhere
+    for fn in QUERIES.values():
+        optimize(fn(), db, s)     # raises PlanInvariantError on violation
+
+
+def test_param_queries_verify_clean(db):
+    for fn, params in PARAM_QUERIES.values():
+        optimize(fn(), db, preset("opt"), bindings=dict(params),
+                 est_params=dict(params))
+        optimize(fn(), db, preset("opt"), est_params=dict(params))
+
+
+def test_final_plans_check_clean(db):
+    for fn in QUERIES.values():
+        plan = optimize(fn(), db, preset("opt"))
+        assert check_plan(plan, db, preset("opt")) == []
+
+
+# ---------------------------------------------------------------------------
+# mutation tests: broken plans / broken passes are caught and attributed
+# ---------------------------------------------------------------------------
+
+def test_broken_input_attributed_to_input(db):
+    plan = ir.Limit(ir.Scan("orders"), 5)     # Limit needs a Sort below
+    with pytest.raises(PlanInvariantError) as ei:
+        optimize(plan, db, preset("opt"))
+    assert ei.value.rule == "limit-above-sort"
+    assert ei.value.pass_name == "input"
+
+
+def test_dangling_column_attributed_to_input(db):
+    plan = ir.Select(ir.Scan("orders"), Cmp("<", col("nope"), lit(1)))
+    with pytest.raises(PlanInvariantError) as ei:
+        optimize(plan, db, preset("opt"))
+    assert ei.value.rule == "column-resolution"
+    assert ei.value.pass_name == "input"
+
+
+class _BreakRename:
+    """Mutation pass: drops a Project rename's source (the ISSUE's example
+    miscompile — downstream consumers reference a column nobody makes)."""
+    name = "BreakRename"
+
+    def run(self, plan, db, settings):
+        for node in ir.walk(plan):
+            if isinstance(node, ir.Project):
+                name = next(iter(node.outputs))
+                node.outputs[name] = col("__missing__")
+                break
+        return plan
+
+
+def test_broken_pass_attributed_by_name(db, monkeypatch):
+    real = pipeline_mod.build_pipeline
+
+    def sabotaged(settings, bindings=None, est_params=None, observed=None):
+        passes = real(settings, bindings, est_params, observed)
+        passes.insert(3, _BreakRename())
+        return passes
+
+    monkeypatch.setattr(pipeline_mod, "build_pipeline", sabotaged)
+    # q7 renames nation columns through Projects; the breaker hits one
+    with pytest.raises(PlanInvariantError) as ei:
+        pipeline_mod.optimize(QUERIES["q7"](), db, preset("opt"))
+    assert ei.value.pass_name == "BreakRename"
+    assert ei.value.rule == "schema"
+    assert "__missing__" in str(ei.value)
+
+
+def test_compact_under_positional_build_is_caught(db):
+    plan = optimize(QUERIES["q3"](), db, preset("opt"))
+    joins = [n for n in ir.walk(plan)
+             if isinstance(n, ir.Join) and n.strategy == "pk_gather"]
+    assert joins, "q3@opt must contain a pk_gather join"
+    j = joins[0]
+    j.build = ir.Compact(j.build, 1024)   # re-packs rows: key != row id
+    bad = [v for v in check_plan(plan, db, preset("opt"))
+           if v.rule == "positional-build-alignment"]
+    assert bad and "aligned" in bad[0].message
+
+
+def test_dense_agg_without_domains_is_caught(db):
+    plan = optimize(QUERIES["q1"](), db, preset("opt"))
+    aggs = [n for n in ir.walk(plan)
+            if isinstance(n, ir.Agg) and n.strategy == "dense"]
+    assert aggs, "q1@opt must lower to a dense agg"
+    aggs[0].domains = None
+    bad = [v for v in check_plan(plan, db, preset("opt"))
+           if v.rule == "dense-agg-domain"]
+    assert bad
+
+
+def test_dense_agg_undersized_domain_is_caught(db):
+    plan = optimize(QUERIES["q1"](), db, preset("opt"))
+    agg = next(n for n in ir.walk(plan)
+               if isinstance(n, ir.Agg) and n.strategy == "dense")
+    agg.domains = [1] * len(agg.domains)  # below the static key bounds
+    bad = [v for v in check_plan(plan, db, preset("opt"))
+           if v.rule == "dense-agg-domain"]
+    assert bad and "scatter" in bad[0].message
+
+
+def test_key_pack_overflow_is_caught(db):
+    st_ps = db.table("partsupp").stats["ps_partkey"]
+    st_li = db.table("lineitem").stats["l_partkey"]
+    old_ps, old_li = st_ps.max, st_li.max
+    try:
+        st_ps.max = st_li.max = 2 ** 31
+        with pytest.raises(PlanInvariantError) as ei:
+            # naive keeps the composite join generic (no bucket_gather)
+            optimize(QUERIES["q9full"](), db, preset("naive"))
+        assert ei.value.rule == "key-pack"
+    finally:
+        st_ps.max, st_li.max = old_ps, old_li
+
+
+def test_string_param_in_scalar_position_is_caught(db):
+    plan = ir.Select(ir.Scan("orders"),
+                     Cmp("<", col("o_totalprice"), Param("p", "str")))
+    bad = [v for v in check_plan(plan, db) if v.rule == "param-dtypes"]
+    assert bad
+
+
+def test_param_dtype_conflict_is_caught(db):
+    from repro.core.expr import And
+    plan = ir.Select(ir.Scan("orders"),
+                     And(Cmp("<", col("o_totalprice"), Param("p", "float32")),
+                         Cmp("<", col("o_shippriority"), Param("p", "int32"))))
+    bad = [v for v in check_plan(plan, db) if v.rule == "param-dtypes"]
+    assert bad
+
+
+def test_date_slice_on_non_date_column_is_caught(db):
+    plan = ir.Scan("orders",
+                   date_slice=ir.DateSlice("o_totalprice", 0, 10))
+    bad = [v for v in check_plan(plan, db) if v.rule == "date-slice"]
+    assert bad and "non-DATE" in bad[0].message
+
+
+def test_join_key_dtype_mismatch_is_caught(db):
+    plan = ir.Join(ir.Scan("lineitem"), ir.Scan("orders"),
+                   "l_quantity", "o_orderkey")   # float vs int
+    bad = [v for v in check_plan(plan, db) if v.rule == "join-keys"]
+    assert bad and "mismatch" in bad[0].message
+
+
+def test_verify_plan_names_pass_and_rule_in_message(db):
+    plan = ir.Limit(ir.Scan("orders"), 5)
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, db, preset("opt"), pass_name="SomePass")
+    msg = str(ei.value)
+    assert "SomePass" in msg and "limit-above-sort" in msg
+    assert "Scan(orders" in msg          # plan_repr excerpt included
+
+
+def test_verify_passes_off_skips_checking(db):
+    s = dataclasses.replace(preset("opt"), verify_passes=False)
+    plan = ir.Limit(ir.Scan("orders"), 5)
+    optimize(plan, db, s)                # ill-formed, but not checked
