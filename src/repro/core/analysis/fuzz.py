@@ -306,9 +306,12 @@ def run_fuzz(
     from repro.core.passes.pipeline import LADDER, preset
     from repro.core.volcano import VolcanoEngine
 
-    presets = presets if presets is not None else list(LADDER)
+    # the opt-pallas rung rides along by default: same plans, same oracle,
+    # exercising the fused kernel paths (interpret mode on CPU)
+    presets = presets if presets is not None else list(LADDER) + ["opt-pallas"]
     compile_presets = (
-        compile_presets if compile_presets is not None else ["naive", "opt"]
+        compile_presets if compile_presets is not None
+        else ["naive", "opt", "opt-pallas"]
     )
     oracle = VolcanoEngine(db)
     rep = FuzzReport()

@@ -46,6 +46,13 @@ class NodeInfo:
     sorted_by: tuple = ()
     clustered_by: Optional[str] = None
     aligned: Optional[str] = None
+    # parent table T when the node is a compacted view of T's rows THAT
+    # CARRIES the CSR key→slot translation vector (ir.Compact.translate):
+    # positional addressing is gone, but a pk_gather probe can recover the
+    # compacted slot of any parent row id through slot_of, so the verifier
+    # accepts a translated frame where it would demand alignment.  Dropped
+    # by anything that loses the staged slot_of (joins, aggs, sorts).
+    translated: Optional[str] = None
 
 
 class Analysis:
@@ -113,25 +120,30 @@ def _derive_scan(p: ir.Scan, sch, db, kids) -> NodeInfo:
 
 def _derive_select(p, sch, db, kids) -> NodeInfo:
     c = kids[0]
-    return NodeInfo(sch, c.card, c.sorted_by, c.clustered_by, c.aligned)
+    return NodeInfo(sch, c.card, c.sorted_by, c.clustered_by, c.aligned,
+                    c.translated)
 
 
 def _derive_project(p, sch, db, kids) -> NodeInfo:
     c = kids[0]
     clustered = c.clustered_by if c.clustered_by in sch else None
     return NodeInfo(sch, c.card, _keep_order(c.sorted_by, sch),
-                    clustered, c.aligned)
+                    clustered, c.aligned, c.translated)
 
 
 def _derive_compact(p: ir.Compact, sch, db, kids) -> NodeInfo:
     c = kids[0]
     if p.capacity <= 0:
         # measure-only point: the frame passes through untouched
-        return NodeInfo(sch, c.card, c.sorted_by, c.clustered_by, c.aligned)
+        return NodeInfo(sch, c.card, c.sorted_by, c.clustered_by, c.aligned,
+                        c.translated)
     # a gathering compact keeps relative order but re-packs physical
-    # rows, so positional alignment is gone
+    # rows, so positional alignment is gone; with `translate` the CSR
+    # slot_of vector re-establishes key addressability over what WAS a
+    # positionally-aligned frame
+    translated = c.aligned if p.translate else None
     return NodeInfo(sch, min(int(p.capacity), c.card), c.sorted_by,
-                    c.clustered_by, None)
+                    c.clustered_by, None, translated)
 
 
 def _derive_join(p, sch, db, kids) -> NodeInfo:

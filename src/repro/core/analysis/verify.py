@@ -302,8 +302,16 @@ def _build_alignment(plan, db, settings, a: Analysis):
                 "positional-build-alignment",
                 f"{node.strategy} join without build_table", node)
             continue
-        got = a.info(node.build).aligned
-        if got != node.build_table:
+        info = a.info(node.build)
+        got = info.aligned
+        # a pk_gather build may instead be a *translated* compact of the
+        # parent (ir.Compact.translate): the CSR slot_of vector recovers
+        # the compacted slot of any parent row id, so key addressing
+        # survives re-packing.  bucket_gather probes a 2-D bucket matrix
+        # whose entries are parent row ids — translation does not apply.
+        translated_ok = (node.strategy == "pk_gather"
+                         and info.translated == node.build_table)
+        if got != node.build_table and not translated_ok:
             yield Violation(
                 "positional-build-alignment",
                 f"build side is not aligned to {node.build_table!r} "

@@ -113,11 +113,25 @@ class Compact:
     decisions change.  The staged program reports each point's true valid
     count keyed by this id, and `PlanCache`'s feedback store uses the
     same ids to override the static estimates on re-plan.  Hand-planted
-    nodes (point_id None) get an `h<i>` id assigned at compile time.
+    nodes (point_id None) get a stable `h<i>` id: the Compaction pass
+    assigns it during its walk (so the adaptive feedback can re-plan
+    hand-planted capacities too), or compile time does when the pass is
+    off.
+
+    `translate=True` additionally emits the CSR key→slot translation
+    vector over the child's row domain (`slot_of[row] = compacted slot,
+    -1 when invalid`), carried on the staged Frame.  This is what lets a
+    `pk_gather` build side be compacted: the join probes `slot_of` by key
+    value first, translating parent-positional addressing into the
+    compacted frame (q17-class selective builds).  The Compaction pass
+    plants translate points on pk_gather build sides under
+    `Settings.use_pallas`; the verifier accepts a translated build where
+    it would otherwise require positional alignment.
     """
     child: "Plan"
     capacity: int
     point_id: Optional[str] = None
+    translate: bool = False
 
 
 @dataclasses.dataclass
@@ -204,7 +218,8 @@ def plan_repr(p: Plan, indent: int = 0) -> str:
                 f"{plan_repr(p.child, indent + 1)}")
     if isinstance(p, Compact):
         pid = f", point={p.point_id}" if p.point_id is not None else ""
-        return (f"{pad}Compact(cap={p.capacity}{pid})\n"
+        tr = ", translate" if p.translate else ""
+        return (f"{pad}Compact(cap={p.capacity}{pid}{tr})\n"
                 f"{plan_repr(p.child, indent + 1)}")
     if isinstance(p, Sort):
         return f"{pad}Sort({p.keys})\n{plan_repr(p.child, indent + 1)}"

@@ -12,13 +12,119 @@ import numpy as np
 
 from repro.core import ir
 from repro.core.expr import eval_expr
+from repro.core.operators import fused as fu
 from repro.core.operators.base import (Binding, F32BIG, Frame, StageCtx,
-                                       frame_nrows, ones_mask)
+                                       and_masks, frame_nrows, ones_mask)
+
+
+def _dense_domain(a: ir.Agg) -> int:
+    D = 1
+    for d in a.domains:
+        D *= d
+    return D
+
+
+def _fusible(a: ir.Agg, ctx: StageCtx) -> bool:
+    """Can this Agg absorb its child Select into the selective pipeline
+    kernel?  Structure is checked BEFORE anything stages (the Select must
+    never stage twice); operand shapes are re-checked after."""
+    if not (ctx.settings.use_pallas and ctx.backend.name == "jax"):
+        return False
+    if not isinstance(a.child, ir.Select):
+        return False
+    if not (fu.elementwise_chain(a.child.child)
+            and fu.kernel_safe(a.child.pred)):
+        return False
+    if not all(sp.fn in ("sum", "count", "avg") for sp in a.aggs):
+        return False
+    if not all(sp.expr is None or fu.kernel_safe(sp.expr) for sp in a.aggs):
+        return False
+    if a.strategy == "scalar" or not a.group_by:
+        return True
+    return (a.strategy == "dense" and not a.carry
+            and _dense_domain(a) <= 4096)
+
+
+def _fused_stage(a: ir.Agg, f: Frame, pred, ctx: StageCtx):
+    """Stage the q6/q19-class selective pipeline: predicate + grouped
+    aggregation in ONE kernel pass, no mask ever materialized in HBM.
+    Returns None when operand collection fails (caller falls back)."""
+    from repro.kernels import ops as kops
+
+    xp = ctx.xp
+    names = [sp.name for sp in a.aggs if sp.expr is not None]
+    val_exprs = [sp.expr for sp in a.aggs if sp.expr is not None]
+    operands = fu.collect_operands(f, [pred] + val_exprs,
+                                   list(a.group_by), ctx)
+    if operands is None:
+        return None
+    cols_d, scalars, pnames = operands
+    pred_fn = fu.make_tile_fn(pred, pnames)
+    value_fns = [fu.make_tile_fn(e, pnames) for e in val_exprs]
+    gidx_fn = None
+    n_groups = 1
+    if a.group_by:                        # dense: mixed-radix in-kernel
+        D = _dense_domain(a)
+        strides = []
+        st = 1
+        for d in reversed(a.domains):
+            strides.append(st)
+            st *= d
+        strides = list(reversed(strides))
+        radix = list(zip(a.group_by, a.domains, strides))
+
+        def gidx_fn(cols, _scalars):
+            idx = None
+            for g, _d, stg in radix:
+                part = cols[g].astype(np.int32) * np.int32(stg)
+                idx = part if idx is None else idx + part
+            return xp.clip(idx, 0, D - 1)
+
+        n_groups = D
+    sums_m, cnt, _total = kops.selective_agg_query(
+        cols_d, scalars, pred_fn, value_fns, gidx_fn, n_groups,
+        interpret=ctx.settings.pallas_interpret)
+
+    def agg_col(spec, row):
+        if spec.fn == "sum":
+            return sums_m[row, names.index(spec.name)]
+        if spec.fn == "count":
+            return cnt[row].astype(np.int32)
+        return sums_m[row, names.index(spec.name)] / xp.maximum(cnt[row], 1.0)
+
+    if not a.group_by:
+        cols = {sp.name: Binding(agg_col(sp, slice(0, 1)), "num")
+                for sp in a.aggs}
+        return ctx.barrier(Frame(cols, None))
+    cols: dict[str, Binding] = {}
+    ar = xp.arange(n_groups, dtype=np.int32)
+    for g, d, stg in radix:
+        b = f.cols[g]
+        keyvals = (ar // np.int32(stg)) % np.int32(d)
+        cols[g] = Binding(keyvals, b.kind, b.table, b.col)
+    for sp in a.aggs:
+        cols[sp.name] = Binding(agg_col(sp, slice(None)), "num")
+    return ctx.barrier(Frame(cols, cnt > 0))
 
 
 def stage(a: ir.Agg, ctx: StageCtx, defer: bool = False) -> Frame:
     be, xp = ctx.backend, ctx.xp
-    f = ctx.stage(a.child)
+    pred = None
+    if _fusible(a, ctx):
+        pred = a.child.pred
+        f = ctx.stage(a.child.child)
+        if f.mask is not None or f.pending:
+            # the chain carried state the kernel can't see — evaluate the
+            # intercepted predicate the ordinary way instead
+            f.mask = and_masks(xp, f.mask, eval_expr(pred, ctx.env(f)))
+            pred = None
+    else:
+        f = ctx.stage(a.child)
+    if pred is not None:
+        out = _fused_stage(a, f, pred, ctx)
+        if out is not None:
+            return out
+        f.mask = and_masks(xp, f.mask, eval_expr(pred, ctx.env(f)))
     n = frame_nrows(f)
     env = ctx.env(f)
     mask = f.mask if f.mask is not None else ones_mask(xp, n)

@@ -43,10 +43,17 @@ class Frame:
     # the front; `mask` marks the pad slots).  Purely informational — no
     # operator branches on it — but tests and debugging read it.
     capacity: Any = None
+    # set by a translate-Compact (ir.Compact.translate): the CSR key→slot
+    # vector over the PRE-compaction row domain — slot_of[row] is the
+    # row's position in this compacted frame, -1 when the row was
+    # mask-invalid.  pk_gather consumes it to probe a compacted build
+    # side by key value (overflowed rows map past `capacity`; the join
+    # drops them and the point's overflow flag triggers the fallback).
+    slot_of: Any = None
 
     def copy(self) -> "Frame":
         return Frame(dict(self.cols), self.mask, list(self.pending),
-                     self.capacity)
+                     self.capacity, self.slot_of)
 
 
 def frame_nrows(f: Frame) -> int:
@@ -151,7 +158,8 @@ class StageCtx:
         cols = {n: Binding(wrapped[n], b.kind, b.table, b.col)
                 for n, b in f.cols.items()}
         mask = None if f.mask is None else self.backend.barrier(f.mask)
-        return Frame(cols, mask, f.pending, f.capacity)
+        slot = None if f.slot_of is None else self.backend.barrier(f.slot_of)
+        return Frame(cols, mask, f.pending, f.capacity, slot)
 
 
 class FrameEnv(EvalEnv):

@@ -1,0 +1,129 @@
+"""Kernel-fusion bridge: compile plan expressions into Pallas tile closures.
+
+The kernels in `repro.kernels` are deliberately core-independent — they
+take named column blocks plus parameter scalars and caller-supplied tile
+functions.  This module is the only place the two layers meet: it decides
+whether a Select/Agg subtree is *kernel-safe* (every expression evaluates
+elementwise over 1-D numeric/code columns — no char-matrix string ops, no
+word matrices, nothing 2-D) and, when it is, packages the staged frame's
+columns, registers the runtime parameters as kernel scalar inputs, and
+wraps `eval_expr` in a `TileEnv` closure the kernel calls per (tile,)
+block.  The closures are pure jnp: the SAME expression evaluator that
+stages the unfused path runs inside the kernel, so fused and unfused
+execution can never disagree on predicate semantics.
+"""
+from __future__ import annotations
+
+from repro.core import expr as E
+from repro.core import ir
+
+# expression nodes whose evaluation is elementwise over 1-D operands (the
+# char/word-matrix string ops need 2-D blocks — not kernel-representable)
+_SAFE = (E.Col, E.Const, E.Param, E.Arith, E.Cmp, E.And, E.Or, E.Not,
+         E.Where, E.Year, E.CodeEq, E.CodeIn, E.CodeRange)
+
+
+def kernel_safe(e: E.Expr) -> bool:
+    """True when every node of `e` evaluates elementwise on 1-D blocks."""
+    if not isinstance(e, _SAFE):
+        return False
+    if isinstance(e, E.Param) and e.dtype == "str":
+        return False
+    if isinstance(e, (E.Arith, E.Cmp, E.And, E.Or)):
+        return kernel_safe(e.lhs) and kernel_safe(e.rhs)
+    if isinstance(e, (E.Not, E.Year)):
+        return kernel_safe(e.operand)
+    if isinstance(e, E.Where):
+        return (kernel_safe(e.cond) and kernel_safe(e.then)
+                and kernel_safe(e.other))
+    return True
+
+
+def expr_params(e: E.Expr) -> list[E.Param]:
+    """Runtime Params of `e`, deduped by name, in first-visit order (the
+    positional order scalars are handed to the kernel in)."""
+    out: list[E.Param] = []
+    seen: set[str] = set()
+
+    def rec(x):
+        if isinstance(x, E.Param):
+            if x.name not in seen:
+                seen.add(x.name)
+                out.append(x)
+        elif isinstance(x, (E.Arith, E.Cmp, E.And, E.Or)):
+            rec(x.lhs), rec(x.rhs)
+        elif isinstance(x, (E.Not, E.Year)):
+            rec(x.operand)
+        elif isinstance(x, E.Where):
+            rec(x.cond), rec(x.then), rec(x.other)
+
+    rec(e)
+    return out
+
+
+def elementwise_chain(p: ir.Plan) -> bool:
+    """True when `p` is a Scan under (only) Projects — the frame has no
+    mask, no pending predicates, and no other operator in between, so a
+    fused kernel's in-kernel predicate is the frame's ONLY filter."""
+    while isinstance(p, ir.Project):
+        p = p.child
+    return isinstance(p, ir.Scan)
+
+
+class TileEnv(E.EvalEnv):
+    """`eval_expr` environment over one kernel tile: columns resolve to
+    the (tile,) blocks the kernel loaded, Params to its scalar refs."""
+
+    def __init__(self, cols: dict, scalars: dict):
+        import jax.numpy as jnp
+
+        super().__init__(jnp, cse=True)
+        self._cols = cols
+        self._scalars = scalars
+
+    def get_num(self, name):
+        return self._cols[name]
+
+    def get_codes(self, name):
+        return self._cols[name]
+
+    def get_param(self, p: E.Param):
+        return self._scalars[p.name]
+
+
+def collect_operands(frame, exprs: list, extra_cols: list, ctx):
+    """(cols, scalars, param_names) for a kernel invocation, or None when
+    any referenced column is not a 1-D numeric/code binding.
+
+    cols maps every column any expr (or `extra_cols`) reads to its staged
+    array; scalars is the positional list of traced parameter values
+    (registered through `ctx.param`, so re-binding never re-stages);
+    param_names matches scalars positionally.
+    """
+    names: set[str] = set(extra_cols)
+    for e in exprs:
+        names |= E.expr_columns(e)
+    cols = {}
+    for nm in sorted(names):
+        b = frame.cols.get(nm)
+        if b is None or b.kind not in ("num", "codes") \
+                or getattr(b.arr, "ndim", 0) != 1:
+            return None
+        cols[nm] = b.arr
+    params: list[E.Param] = []
+    seen: set[str] = set()
+    for e in exprs:
+        for p in expr_params(e):
+            if p.name not in seen:
+                seen.add(p.name)
+                params.append(p)
+    scalars = [ctx.param(p) for p in params]
+    return cols, scalars, [p.name for p in params]
+
+
+def make_tile_fn(e: E.Expr, param_names: list[str]):
+    """One expression -> kernel tile closure `(cols, scalars) -> block`."""
+    def fn(cols, scalars):
+        env = TileEnv(cols, dict(zip(param_names, scalars)))
+        return E.eval_expr(e, env)
+    return fn

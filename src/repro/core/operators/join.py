@@ -31,10 +31,26 @@ def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
 
     if j.strategy == "pk_gather":
         build = ctx.stage(j.build, defer=not ctx.settings.hoist)
-        idx = stream.cols[j.stream_key].arr
-        bmask_g = None
-        if build.mask is not None:
-            bmask_g = be.take(build.mask, idx)
+        if build.slot_of is not None:
+            # compacted (translate) build side: the parent-positional
+            # addressing pk_gather relies on is gone, so probe the CSR
+            # key→slot vector first — slot_of lives on the parent row
+            # domain, its values address the compacted frame.  A slot of
+            # -1 is a mask-invalid parent row; a slot >= n_b is a row the
+            # compaction overflowed past capacity (dropped here, but the
+            # point's count already exceeds capacity so the runtime
+            # re-executes the uncompacted fallback — never a wrong answer).
+            n_b = frame_nrows(build)
+            slot = be.take(build.slot_of, stream.cols[j.stream_key].arr)
+            idx = xp.clip(slot, 0, n_b - 1)
+            bmask_g = (slot >= 0) & (slot < n_b)
+            if build.mask is not None:
+                bmask_g = bmask_g & be.take(build.mask, idx)
+        else:
+            idx = stream.cols[j.stream_key].arr
+            bmask_g = None
+            if build.mask is not None:
+                bmask_g = be.take(build.mask, idx)
         cols = dict(stream.cols)
         for name, b in build.cols.items():
             if name in cols:

@@ -97,10 +97,16 @@ class _Ctx:
     observed: dict                  # point_id -> measured valid count
     analysis: object = None         # analysis.Analysis of the input plan
     next_site: int = 0
+    next_hand: int = 0
 
     def site_id(self) -> str:
         pid = f"c{self.next_site}"
         self.next_site += 1
+        return pid
+
+    def hand_id(self) -> str:
+        pid = f"h{self.next_hand}"
+        self.next_hand += 1
         return pid
 
 
@@ -176,9 +182,22 @@ def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool,
     if isinstance(p, ir.Compact):   # pre-existing (hand-planted) point
         child, c = _walk(p.child, ctx, heavy, protect)
         p.child = child
+        if p.point_id is None:
+            # assign the stable h<i> id HERE, not at compile time: the
+            # same pass walks the same plan shape on every re-plan, so the
+            # numbering reproduces and the feedback store's observed
+            # counts (keyed by these ids) can re-plan hand-planted
+            # capacities exactly like pass-planted ones
+            p.point_id = ctx.hand_id()
         cap = int(p.capacity)
         if cap <= 0:                # measure-only: cardinality untouched
             return p, c
+        obs = ctx.observed.get(p.point_id)
+        if obs is not None:
+            # measured demand overrides the hand-chosen capacity (the
+            # PR-5 bug: hand points were observed but never re-planned,
+            # so an undershot hand capacity overflowed forever)
+            p.capacity = cap = observed_bucket(obs)
         return p, Card(min(cap, c.phys), min(c.valid, float(cap)), True)
 
     if isinstance(p, ir.Join):
@@ -207,6 +226,13 @@ def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool,
             ratio = _RATIO_SORT if p.strategy == "generic" \
                 else _RATIO_ELEMENTWISE
             build, bc = _maybe_compact(build, bc, ctx, ratio)
+        elif p.strategy == "pk_gather":
+            # a *translated* compact re-establishes key addressing over
+            # the compacted build via the CSR slot_of vector (planted only
+            # under Settings.use_pallas — gated inside _maybe_compact so
+            # the candidate-site numbering is preset-independent)
+            build, bc = _maybe_compact(build, bc, ctx, _RATIO_ELEMENTWISE,
+                                       translate=True)
         p.stream, p.build = stream, build
         if p.kind == "inner":
             valid, masked = sc.valid * bfrac, sc.masked or bc.masked
@@ -263,7 +289,8 @@ def _bucket(est_rows: float, margin: float) -> int:
 
 
 def _maybe_compact(node: ir.Plan, card: Card, ctx: _Ctx, ratio: int,
-                   protect: bool = False) -> tuple[ir.Plan, Card]:
+                   protect: bool = False,
+                   translate: bool = False) -> tuple[ir.Plan, Card]:
     """Plant a Compact over `node` if the planner expects the consumer to
     win at least `ratio`x in row count.  Returns the (possibly wrapped)
     node and the post-compaction cardinality.
@@ -290,6 +317,10 @@ def _maybe_compact(node: ir.Plan, card: Card, ctx: _Ctx, ratio: int,
         # this frame flows into a positional build side: a gathering
         # compact here would break key-is-row-id addressing
         return node, card
+    if translate and not s.use_pallas:
+        # key→slot translation is the kernel path's contract; without it
+        # pk_gather keeps positional addressing and the build stays intact
+        return node, card
     obs = ctx.observed.get(pid)
     if obs is not None:
         # measured headroom: the bucket just above the observed count
@@ -301,16 +332,17 @@ def _maybe_compact(node: ir.Plan, card: Card, ctx: _Ctx, ratio: int,
         est_valid = card.valid
     if cap * ratio > card.phys:
         return node, card
-    return _wrap(node, cap, pid), Card(cap, est_valid, True)
+    return _wrap(node, cap, pid, translate), Card(cap, est_valid, True)
 
 
-def _wrap(node: ir.Plan, cap: int, pid: str) -> ir.Plan:
+def _wrap(node: ir.Plan, cap: int, pid: str,
+          translate: bool = False) -> ir.Plan:
     # sink below Projects so the projection's expressions also run narrow
     # (a Project is elementwise: compact-then-project == project-then-compact)
     if isinstance(node, ir.Project):
-        node.child = _wrap(node.child, cap, pid)
+        node.child = _wrap(node.child, cap, pid, translate)
         return node
-    return ir.Compact(node, cap, point_id=pid)
+    return ir.Compact(node, cap, point_id=pid, translate=translate)
 
 
 # ---------------------------------------------------------------------------

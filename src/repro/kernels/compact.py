@@ -1,0 +1,205 @@
+"""One-HBM-pass stream compaction Pallas TPU kernel.
+
+The engine's XLA compaction path (`backend.compact`) is three unfused ops
+— `cumsum(mask)`, a batched `searchsorted` over the capacity slots, and a
+`clip` — i.e. three full passes over HBM for an operation the paper's
+generated C performs inside the same loop that computed the mask (§3.2.2,
+Fig 4b).  This kernel is the single-pass form:
+
+  * **block-local scan in VMEM** — each grid step loads one (tile, 1) mask
+    block and ranks its valid rows with an inclusive `cumsum` that never
+    leaves VMEM;
+  * **hierarchical block offsets across the sequential grid** — the TPU
+    grid executes steps in order, so the running global offset is carried
+    in the count output ref itself: step i reads the total of steps
+     0..i-1, adds its block count, writes it back.  No second pass, no
+    scratch;
+  * **within-tile pack on the MXU** — valid rows scatter to their local
+    rank via a one-hot × iota matmul (`onehot[T, T]^T @ row_ids[T, 1]`),
+    the same idiom `filter_agg` uses for grouped accumulation.  Exact in
+    f32 for any tile < 2**24;
+  * **capacity as a prefetched scalar** (`PrefetchScalarGridSpec`) — the
+    output allocation is static (JAX shapes must be), but the *store
+    clamp* reads the capacity from SMEM before the grid starts, so one
+    compiled kernel serves every call at a given shape;
+  * **overflow semantics unchanged** — the returned count is the exact
+    mask total (it may exceed `capacity`: the caller's overflow signal);
+    rows past the capacity land in a `tile`-row pad region of the output
+    allocation and are sliced off, never written out of bounds.
+
+Contract (identical to `backend.compact`): `(idx int32[capacity], count
+int32)` — the first `min(count, capacity)` slots hold the valid row ids in
+order; pad slots are zero (in `[0, n)`, safe for clamping gathers).
+
+`compact_translate` additionally emits the CSR-style key→slot translation
+over the *parent domain*: `slot_of[row] = rank(row)` when `mask[row]` else
+-1 — the structure a compact-aware `pk_gather` probes through
+(`operators/join.py`), computed in the same single pass.
+
+`compact_pred` fuses the predicate itself: instead of a precomputed mask
+it takes named column blocks plus parameter scalars and evaluates a
+caller-supplied tile function in-kernel, so filter → compact is one HBM
+pass over the columns (the selective-pipeline building block; see
+`filter_agg.selective_filter_agg` for the version that also aggregates).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compact_body(step, cap, m, n_rows, tile, idx_ref, cnt_ref, slot_ref):
+    """Shared per-tile body: rank, pack, store.  `m` is the (tile, 1) bool
+    mask block for grid step `step`; `cap` the clamp capacity."""
+    @pl.when(step == 0)
+    def _init():
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+        cnt_ref[0, 0] = 0
+        # (slot_ref blocks are per-step: every block is fully written below)
+
+    # mask off the padded tail rows (global row id >= n_rows)
+    gids = step * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)
+    m = m & (gids < n_rows)
+
+    off = cnt_ref[0, 0]                     # total of steps 0..step-1
+    lc = jnp.cumsum(m.astype(jnp.int32), axis=0)    # VMEM-local scan
+    k = lc[-1, 0]                           # this block's valid count
+    rank = lc - 1                           # local rank of each valid row
+    # pack: one-hot(rank) scatters row ids to the front (MXU contraction)
+    u = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
+    onehot = (m & (rank == u)).astype(jnp.float32)
+    packed = jnp.dot(onehot.T, gids.astype(jnp.float32),
+                     preferred_element_type=jnp.float32).astype(jnp.int32)
+    filled = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0) < k
+    packed = jnp.where(filled, packed, 0)
+    # dynamic-slice store at the running offset, clamped to the capacity:
+    # an overflowing block writes into the idx allocation's tile-row pad
+    # region (sliced off by the wrapper) — never out of bounds
+    idx_ref[pl.ds(jnp.minimum(off, cap), tile), :] = packed
+    if slot_ref is not None:
+        slot_ref[...] = jnp.where(m, off + rank, -1)
+    cnt_ref[0, 0] = off + k
+
+
+def _mask_kernel(cap_ref, mask_ref, idx_ref, cnt_ref, *rest, n_rows: int,
+                 tile: int):
+    slot_ref = rest[0] if rest else None
+    _compact_body(pl.program_id(0), cap_ref[0], mask_ref[...], n_rows, tile,
+                  idx_ref, cnt_ref, slot_ref)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "tile", "interpret",
+                                    "translate"))
+def compact(mask: jax.Array, capacity: int, *, tile: int = 1024,
+            interpret: bool = True, translate: bool = False):
+    """Single-pass `(idx int32[capacity], count int32)` over a boolean
+    mask; with `translate=True` also returns `slot_of int32[n]` (-1 on
+    invalid rows, else the row's compacted slot)."""
+    n = mask.shape[0]
+    tile = min(tile, max(8, 1 << (max(n, 1) - 1).bit_length()))
+    n_pad = (-n) % tile
+    if n_pad:
+        mask = jnp.pad(mask, (0, n_pad))
+    n_t = n + n_pad
+    cap_pad = capacity + tile     # overflow spill region (sliced off)
+
+    out_shape = [jax.ShapeDtypeStruct((cap_pad, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((1, 1), jnp.int32)]
+    out_specs = [pl.BlockSpec((cap_pad, 1), lambda i, c: (0, 0)),
+                 pl.BlockSpec((1, 1), lambda i, c: (0, 0))]
+    if translate:
+        out_shape.append(jax.ShapeDtypeStruct((n_t, 1), jnp.int32))
+        out_specs.append(pl.BlockSpec((tile, 1), lambda i, c: (i, 0)))
+
+    res = pl.pallas_call(
+        functools.partial(_mask_kernel, n_rows=n, tile=tile),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_t // tile,),
+            in_specs=[pl.BlockSpec((tile, 1), lambda i, c: (i, 0))],
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.asarray([capacity], jnp.int32), mask[:, None])
+    idx, cnt = res[0][:capacity, 0], res[1][0, 0]
+    if translate:
+        return idx, cnt, res[2][:n, 0]
+    return idx, cnt
+
+
+def compact_translate(mask: jax.Array, capacity: int, *, tile: int = 1024,
+                      interpret: bool = True):
+    """`compact` + the CSR key→slot translation vector, one pass."""
+    return compact(mask, capacity, tile=tile, interpret=interpret,
+                   translate=True)
+
+
+def _pred_kernel(*refs, names, n_scalars: int, pred_fn, n_rows: int,
+                 tile: int, translate: bool):
+    """Fused predicate + compaction: refs are
+    [col_0..col_{C-1}, scalar_0..scalar_{S-1}, idx, cnt, (slot)]."""
+    ncols = len(names)
+    cols = {nm: refs[i][...][:, 0] for i, nm in enumerate(names)}
+    scalars = [refs[ncols + i][0, 0] for i in range(n_scalars)]
+    idx_ref, cnt_ref = refs[ncols + n_scalars], refs[ncols + n_scalars + 1]
+    slot_ref = refs[ncols + n_scalars + 2] if translate else None
+    m = jnp.asarray(pred_fn(cols, scalars))
+    m = jnp.broadcast_to(m, (tile,)).astype(bool).reshape(tile, 1)
+    _compact_body(pl.program_id(0), jnp.int32(idx_ref.shape[0] - tile),
+                  m, n_rows, tile, idx_ref, cnt_ref, slot_ref)
+
+
+def compact_pred(cols: dict, scalars: list, pred_fn, capacity: int, *,
+                 tile: int = 1024, interpret: bool = True,
+                 translate: bool = False):
+    """Filter → compact fused into one HBM pass: the predicate is
+    evaluated in-kernel on (tile,) column blocks.
+
+    cols: {name: (n,) array} — every column the predicate reads;
+    scalars: list of () arrays — runtime parameters, positionally
+    matching what `pred_fn` expects;
+    pred_fn(cols_tile, scalars) -> (tile,) bool, pure jnp elementwise.
+    Returns the `compact` contract (+ `slot_of` when `translate`).
+    """
+    arrs = list(cols.values())
+    n = arrs[0].shape[0]
+    tile = min(tile, max(8, 1 << (max(n, 1) - 1).bit_length()))
+    n_pad = (-n) % tile
+    names = list(cols)
+    padded = {nm: jnp.pad(a, (0, n_pad)) if n_pad else a
+              for nm, a in cols.items()}
+    n_t = n + n_pad
+    cap_pad = capacity + tile
+
+    in_specs = [pl.BlockSpec((tile, 1), lambda i: (i, 0)) for _ in names]
+    in_specs += [pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in scalars]
+    out_shape = [jax.ShapeDtypeStruct((cap_pad, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((1, 1), jnp.int32)]
+    out_specs = [pl.BlockSpec((cap_pad, 1), lambda i: (0, 0)),
+                 pl.BlockSpec((1, 1), lambda i: (0, 0))]
+    if translate:
+        out_shape.append(jax.ShapeDtypeStruct((n_t, 1), jnp.int32))
+        out_specs.append(pl.BlockSpec((tile, 1), lambda i: (i, 0)))
+
+    ins = [padded[nm][:, None] for nm in names]
+    ins += [jnp.asarray(s).reshape(1, 1) for s in scalars]
+    res = pl.pallas_call(
+        functools.partial(_pred_kernel, names=names,
+                          n_scalars=len(scalars), pred_fn=pred_fn,
+                          n_rows=n, tile=tile, translate=translate),
+        grid=(n_t // tile,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*ins)
+    idx, cnt = res[0][:capacity, 0], res[1][0, 0]
+    if translate:
+        return idx, cnt, res[2][:n, 0]
+    return idx, cnt

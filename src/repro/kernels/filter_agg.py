@@ -17,6 +17,13 @@ sequential, so `out_ref` accumulation is safe), i.e. the paper's
 becomes a VMEM-resident scratch that never touches HBM until the end.
 
 Scalar aggregation (Q6) is the G=1 special case.
+
+`selective_filter_agg` extends the same kernel into the full selective
+pipeline: the predicate itself is evaluated in-kernel from named column
+blocks (+ parameter scalars), and the pass optionally emits the compacted
+row-id vector / key→slot translation alongside the aggregates — filter →
+compact → segment-reduce in ONE pass over HBM, against ≥3 passes for the
+unfused mask-then-cumsum-then-gather path.
 """
 from __future__ import annotations
 
@@ -25,6 +32,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.compact import _compact_body
 
 
 def _kernel(mask_ref, gidx_ref, vals_ref, out_ref, *, n_groups: int):
@@ -58,7 +67,7 @@ def filter_agg(mask: jax.Array, gidx: jax.Array, vals: jax.Array,
     # --- padding to hardware-friendly tiles -------------------------------
     n_pad = (-n) % tile
     a_pad = (-a) % 128 if not interpret else 0
-    g_eff = n_groups if interpret else max(8, n_groups)
+    g_eff = _group_pad(n_groups, interpret)
     if n_pad:
         mask = jnp.pad(mask, (0, n_pad))          # padded rows masked out
         gidx = jnp.pad(gidx, (0, n_pad))
@@ -81,3 +90,130 @@ def filter_agg(mask: jax.Array, gidx: jax.Array, vals: jax.Array,
         interpret=interpret,
     )(mask[:, None], gidx[:, None], vals)
     return out[:n_groups, :a]
+
+
+def _group_pad(n_groups: int, interpret: bool) -> int:
+    """Group-axis padding for the (G, A) VMEM accumulator: compiled TPU
+    kernels need the sublane axis in multiples of 8 (f32 min tile); the
+    interpreter takes any shape.  The pad tail is sliced off before the
+    caller ever sees it — slicing is centralized HERE, not at call sites."""
+    return n_groups if interpret else max(8, -(-n_groups // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+# the fused selective pipeline: predicate -> (compaction) -> segment-reduce
+# ---------------------------------------------------------------------------
+
+def _pipeline_kernel(*refs, names, n_scalars: int, pred_fn, vals_fn,
+                     gidx_fn, n_rows: int, tile: int, n_vals: int,
+                     g_eff: int, a_eff: int, capacity: int, translate: bool):
+    """refs = [col_0..col_{C-1}, scalar_0..scalar_{S-1},
+               sums, cnt, (idx), (slot)]"""
+    step = pl.program_id(0)
+    ncols = len(names)
+    cols = {nm: refs[i][...][:, 0] for i, nm in enumerate(names)}
+    scalars = [refs[ncols + i][0, 0] for i in range(n_scalars)]
+    o = ncols + n_scalars
+    sums_ref, cnt_ref = refs[o], refs[o + 1]
+    idx_ref = refs[o + 2] if capacity > 0 else None
+    slot_ref = refs[o + 3] if translate else None
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+    # --- predicate, masked past the padded tail ---------------------------
+    m = jnp.broadcast_to(jnp.asarray(pred_fn(cols, scalars)), (tile,))
+    gids = step * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)
+    m = m.astype(bool).reshape(tile, 1) & (gids < n_rows)
+
+    # --- segment-reduce: one-hot x values on the MXU ----------------------
+    vs = [jnp.broadcast_to(jnp.asarray(v, jnp.float32), (tile,))
+          for v in vals_fn(cols, scalars)]
+    v = jnp.stack(vs, axis=1) if vs else jnp.zeros((tile, 0), jnp.float32)
+    if a_eff > n_vals:
+        v = jnp.pad(v, ((0, 0), (0, a_eff - n_vals)))
+    g = jnp.zeros((tile,), jnp.int32) if gidx_fn is None \
+        else jnp.broadcast_to(jnp.asarray(gidx_fn(cols, scalars),
+                                          dtype=jnp.int32), (tile,))
+    groups = jax.lax.broadcasted_iota(jnp.int32, (tile, g_eff), 1)
+    onehot = ((g.reshape(tile, 1) == groups) & m).astype(jnp.float32)
+    sums_ref[...] += jnp.dot(onehot.T, v * m.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+
+    # --- compaction: scan + pack in the same VMEM residency ---------------
+    if idx_ref is not None:
+        _compact_body(step, jnp.int32(capacity), m, n_rows, tile,
+                      idx_ref, cnt_ref, slot_ref)
+    else:
+        # still report the exact valid total (the caller's count signal)
+        @pl.when(step == 0)
+        def _init_cnt():
+            cnt_ref[0, 0] = 0
+        cnt_ref[0, 0] += jnp.sum(m.astype(jnp.int32))
+
+
+def selective_filter_agg(cols: dict, scalars: list, pred_fn, vals_fn,
+                         gidx_fn, n_vals: int, n_groups: int,
+                         capacity: int = 0, translate: bool = False, *,
+                         tile: int = 1024, interpret: bool = True):
+    """The whole selective pipeline in one kernel pass.
+
+    cols: {name: (n,) array} — every column any tile function reads;
+    scalars: list of () arrays (runtime parameters);
+    pred_fn(cols, scalars)  -> (tile,) bool       selection predicate
+    vals_fn(cols, scalars)  -> list of n_vals (tile,) f32 aggregate inputs
+    gidx_fn(cols, scalars)  -> (tile,) int32 group index, or None (G=1)
+
+    Returns (sums (n_groups, n_vals) f32, count int32[, idx int32[capacity]
+    [, slot_of int32[n]]]): `count` is the exact number of predicate-true
+    rows (> capacity = overflow); with `capacity > 0` the compacted row-id
+    vector is emitted from the same pass, and `translate` adds the CSR
+    key→slot vector over the input domain.
+    """
+    arrs = list(cols.values())
+    n = arrs[0].shape[0]
+    tile = min(tile, max(8, 1 << (max(n, 1) - 1).bit_length()))
+    n_pad = (-n) % tile
+    names = list(cols)
+    padded = {nm: jnp.pad(a, (0, n_pad)) if n_pad else a
+              for nm, a in cols.items()}
+    n_t = n + n_pad
+    g_eff = _group_pad(n_groups, interpret)
+    a_eff = n_vals if interpret else max(128, -(-n_vals // 128) * 128)
+    cap_pad = capacity + tile
+
+    in_specs = [pl.BlockSpec((tile, 1), lambda i: (i, 0)) for _ in names]
+    in_specs += [pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in scalars]
+    out_shape = [jax.ShapeDtypeStruct((g_eff, a_eff), jnp.float32),
+                 jax.ShapeDtypeStruct((1, 1), jnp.int32)]
+    out_specs = [pl.BlockSpec((g_eff, a_eff), lambda i: (0, 0)),
+                 pl.BlockSpec((1, 1), lambda i: (0, 0))]
+    if capacity > 0:
+        out_shape.append(jax.ShapeDtypeStruct((cap_pad, 1), jnp.int32))
+        out_specs.append(pl.BlockSpec((cap_pad, 1), lambda i: (0, 0)))
+    if translate:
+        assert capacity > 0, "translate requires a compaction capacity"
+        out_shape.append(jax.ShapeDtypeStruct((n_t, 1), jnp.int32))
+        out_specs.append(pl.BlockSpec((tile, 1), lambda i: (i, 0)))
+
+    ins = [padded[nm][:, None] for nm in names]
+    ins += [jnp.asarray(s).reshape(1, 1) for s in scalars]
+    res = pl.pallas_call(
+        functools.partial(
+            _pipeline_kernel, names=names, n_scalars=len(scalars),
+            pred_fn=pred_fn, vals_fn=vals_fn, gidx_fn=gidx_fn, n_rows=n,
+            tile=tile, n_vals=n_vals, g_eff=g_eff, a_eff=a_eff,
+            capacity=capacity, translate=translate),
+        grid=(n_t // tile,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*ins)
+    out = [res[0][:n_groups, :n_vals], res[1][0, 0]]
+    if capacity > 0:
+        out.append(res[2][:capacity, 0])
+    if translate:
+        out.append(res[3][:n, 0])
+    return tuple(out)

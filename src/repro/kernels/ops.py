@@ -5,18 +5,24 @@ auto-detects — compiled Mosaic/Triton kernels when a TPU or GPU backend is
 present, the (slow, validation-only) Pallas interpreter on CPU.  Pass an
 explicit bool to force either mode (`Settings.pallas_interpret` threads the
 engine-level override through).  `filter_agg_query` is the integration
-point used by `repro.core.operators.agg` when `Settings.use_pallas` is on.
+point used by `repro.core.operators.agg` when `Settings.use_pallas` is on;
+`compact_query` / `compact_pred_query` / `selective_agg_query` are the
+corresponding single-pass entry points for `operators.compact` and the
+fused selective pipeline.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.filter_agg import filter_agg
+from repro.kernels.compact import compact, compact_pred, compact_translate
+from repro.kernels.filter_agg import filter_agg, selective_filter_agg
 from repro.kernels.gather_join import gather_join
 from repro.kernels.topk import masked_topk
 
 __all__ = ["filter_agg", "gather_join", "masked_topk", "filter_agg_query",
-           "resolve_interpret"]
+           "compact", "compact_translate", "compact_pred", "compact_query",
+           "compact_pred_query", "selective_filter_agg",
+           "selective_agg_query", "resolve_interpret"]
 
 
 def resolve_interpret(interpret: "bool | None") -> bool:
@@ -37,3 +43,34 @@ def filter_agg_query(mask, gidx, value_cols, n_groups, *, interpret=None):
     out = filter_agg(mask, gidx.astype(jnp.int32), vals, n_groups,
                      interpret=resolve_interpret(interpret))
     return out[:, :-1], out[:, -1]
+
+
+def compact_query(mask, capacity, *, translate=False, interpret=None):
+    """Single-HBM-pass drop-in for `backend.compact`: (idx, count), plus
+    the key→slot translation vector when `translate`."""
+    return compact(mask, int(capacity), translate=translate,
+                   interpret=resolve_interpret(interpret))
+
+
+def compact_pred_query(cols, scalars, pred_fn, capacity, *, translate=False,
+                       interpret=None):
+    """Fused filter → compact: predicate evaluated in-kernel."""
+    return compact_pred(cols, scalars, pred_fn, int(capacity),
+                        translate=translate,
+                        interpret=resolve_interpret(interpret))
+
+
+def selective_agg_query(cols, scalars, pred_fn, value_fns, gidx_fn,
+                        n_groups, *, interpret=None):
+    """The q19-class pipeline: in-kernel predicate + grouped aggregation
+    (an implicit count column is appended, mirroring `filter_agg_query`).
+    Returns (sums (G, A), counts (G,), total_count)."""
+    a = len(value_fns)
+
+    def vals_fn(c, s):
+        return [f(c, s) for f in value_fns] + [jnp.float32(1.0)]
+
+    sums, total = selective_filter_agg(
+        cols, scalars, pred_fn, vals_fn, gidx_fn, a + 1, n_groups,
+        interpret=resolve_interpret(interpret))
+    return sums[:, :-1], sums[:, -1], total

@@ -17,6 +17,48 @@ def gather_join_ref(fk, table):
     return jnp.where(ok[:, None], out, 0.0)
 
 
+def compact_ref(mask, capacity):
+    """(idx, count) oracle matching `backend.compact`'s contract: the
+    first min(count, capacity) slots are the valid row ids in order, pad
+    slots zero, count exact (may exceed capacity)."""
+    n = mask.shape[0]
+    c = jnp.cumsum(mask.astype(jnp.int32))
+    count = c[-1] if n else jnp.int32(0)
+    pos = jnp.searchsorted(c, jnp.arange(1, capacity + 1, dtype=jnp.int32))
+    valid = jnp.arange(capacity) < jnp.minimum(count, capacity)
+    return jnp.where(valid, jnp.clip(pos, 0, max(n - 1, 0)), 0) \
+        .astype(jnp.int32), count
+
+
+def slot_of_ref(mask):
+    """CSR key→slot translation oracle: the compacted slot of every valid
+    row (its rank among valid rows), -1 elsewhere."""
+    c = jnp.cumsum(mask.astype(jnp.int32))
+    return jnp.where(mask, c - 1, -1).astype(jnp.int32)
+
+
+def selective_filter_agg_ref(cols, scalars, pred_fn, vals_fn, gidx_fn,
+                             n_vals, n_groups, capacity=0, translate=False):
+    """Unfused oracle of the selective pipeline: evaluate the same tile
+    functions over the full arrays, then mask-aggregate / compact."""
+    m = jnp.asarray(pred_fn(cols, scalars))
+    n = next(iter(cols.values())).shape[0]
+    m = jnp.broadcast_to(m, (n,)).astype(bool)
+    vs = [jnp.broadcast_to(jnp.asarray(v, jnp.float32), (n,))
+          for v in vals_fn(cols, scalars)]
+    vals = jnp.stack(vs, axis=1) if vs else jnp.zeros((n, 0), jnp.float32)
+    gidx = jnp.zeros((n,), jnp.int32) if gidx_fn is None \
+        else jnp.broadcast_to(jnp.asarray(gidx_fn(cols, scalars),
+                                          dtype=jnp.int32), (n,))
+    sums = filter_agg_ref(m, gidx, vals, n_groups)
+    out = [sums, m.astype(jnp.int32).sum()]
+    if capacity > 0:
+        out.append(compact_ref(m, capacity)[0])
+    if translate:
+        out.append(slot_of_ref(m))
+    return tuple(out)
+
+
 def masked_topk_ref(vals, mask, k):
     neg = jnp.float32(-3.0e38)
     v = jnp.where(mask, vals, neg)

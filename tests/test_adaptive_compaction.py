@@ -269,3 +269,27 @@ def test_observed_counts_are_true_counts(db):
     true_rows = int(res["c"][0])
     assert true_rows > 64
     assert cq.observed_max == {"h0": true_rows}
+
+
+def test_hand_planted_point_replans_from_observed(db):
+    """PR-5 residual: hand-planted Compact nodes got their counts observed
+    but the pass's pre-existing-point branch never consulted the feedback
+    store, so an undershot hand capacity overflowed on every execution
+    forever.  The pass now assigns hand points stable h-ids and applies
+    the observed override exactly like planted points."""
+    def build():
+        sel = Select(Scan("lineitem"), Cmp("<", col("l_quantity"), lit(2.0)))
+        return Agg(Compact(sel, 64), [], [AggSpec("c", "count")])
+
+    s = _settings(replan_after=1)
+    cache = PlanCache(db)
+    res = cache.execute(build(), s)
+    true_rows = int(res["c"][0])
+    assert true_rows > 64                    # the hand capacity undershot
+    assert cache.stats.replans == 1          # ... and the overflow re-planned
+
+    cq, _ = cache.get(build(), s)
+    assert cq.point_caps["h0"] == observed_bucket(true_rows)
+    res2 = cache.execute(build(), s)
+    assert int(res2["c"][0]) == true_rows
+    assert cq.n_overflows == 0 and cache.stats.replans == 1
