@@ -14,7 +14,7 @@ def main() -> None:
                             bench_analysis, bench_batched_bindings,
                             bench_compaction, bench_compile, bench_kernels,
                             bench_ladder, bench_loading, bench_memory,
-                            bench_plan_cache, bench_roofline)
+                            bench_plan_cache, bench_roofline, bench_sharding)
 
     quick = os.environ.get("REPRO_QUICK") == "1"
     print("name,us_per_call,derived")
@@ -43,6 +43,7 @@ def main() -> None:
         bench_ladder.run()
         bench_ablation.run()
     bench_roofline.run()
+    bench_sharding.run()
     sys.stdout.flush()
 
 

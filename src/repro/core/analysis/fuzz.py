@@ -306,9 +306,14 @@ def run_fuzz(
     from repro.core.passes.pipeline import LADDER, preset
     from repro.core.volcano import VolcanoEngine
 
-    # the opt-pallas rung rides along by default: same plans, same oracle,
-    # exercising the fused kernel paths (interpret mode on CPU)
-    presets = presets if presets is not None else list(LADDER) + ["opt-pallas"]
+    # the opt-pallas and opt-shard rungs ride along by default: same plans,
+    # same oracle, exercising the fused kernel paths (interpret mode on
+    # CPU) and the Exchange-planting pass + its verifier rules.  opt-shard
+    # stays out of compile_presets: CompiledQueryBatch and single-device
+    # CI hosts don't compose with a >1 mesh, and the optimize rung is
+    # where the sharding invariants live.
+    presets = (presets if presets is not None
+               else list(LADDER) + ["opt-pallas", "opt-shard"])
     compile_presets = (
         compile_presets if compile_presets is not None
         else ["naive", "opt", "opt-pallas"]

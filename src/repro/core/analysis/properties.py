@@ -53,6 +53,15 @@ class NodeInfo:
     # accepts a translated frame where it would demand alignment.  Dropped
     # by anything that loses the staged slot_of (joins, aggs, sorts).
     translated: Optional[str] = None
+    # partition root table when the node's frame is partitioned over the
+    # mesh's data axis (mirrors the staged Frame.part threading exactly);
+    # None = replicated.  `card` is then the PER-SHARD bound — the frame
+    # height inside shard_map, which is what Compact capacities and the
+    # dense-agg planner must size against.
+    part: Optional[str] = None
+    # mesh size of the subtree (max over partitioned scans below; 1 when
+    # unsharded) — what an Exchange multiplies card by when gathering.
+    shards: int = 1
 
 
 class Analysis:
@@ -109,6 +118,14 @@ def _keep_order(order: tuple, schema: Schema) -> tuple:
 def _derive_scan(p: ir.Scan, sch, db, kids) -> NodeInfo:
     t = db.table(p.table)
     n = t.nrows
+    if p.shard is not None:
+        # partitioned scan: the staged frame is the shard-local block —
+        # per-shard card, and positional alignment only for the root
+        # (padded position == global row id modulo the pk_gather rebase);
+        # a routed child's rows are owner-permuted, alignment is gone.
+        aligned = p.table if p.shard.part == p.table else None
+        return NodeInfo(sch, p.shard.per_shard_rows, aligned=aligned,
+                        part=p.shard.part, shards=p.shard.n_shards)
     if p.date_slice is None:
         return NodeInfo(sch, n, aligned=p.table)
     ds = p.date_slice
@@ -121,14 +138,14 @@ def _derive_scan(p: ir.Scan, sch, db, kids) -> NodeInfo:
 def _derive_select(p, sch, db, kids) -> NodeInfo:
     c = kids[0]
     return NodeInfo(sch, c.card, c.sorted_by, c.clustered_by, c.aligned,
-                    c.translated)
+                    c.translated, c.part, c.shards)
 
 
 def _derive_project(p, sch, db, kids) -> NodeInfo:
     c = kids[0]
     clustered = c.clustered_by if c.clustered_by in sch else None
     return NodeInfo(sch, c.card, _keep_order(c.sorted_by, sch),
-                    clustered, c.aligned, c.translated)
+                    clustered, c.aligned, c.translated, c.part, c.shards)
 
 
 def _derive_compact(p: ir.Compact, sch, db, kids) -> NodeInfo:
@@ -136,27 +153,45 @@ def _derive_compact(p: ir.Compact, sch, db, kids) -> NodeInfo:
     if p.capacity <= 0:
         # measure-only point: the frame passes through untouched
         return NodeInfo(sch, c.card, c.sorted_by, c.clustered_by, c.aligned,
-                        c.translated)
+                        c.translated, c.part, c.shards)
     # a gathering compact keeps relative order but re-packs physical
     # rows, so positional alignment is gone; with `translate` the CSR
     # slot_of vector re-establishes key addressability over what WAS a
     # positionally-aligned frame
     translated = c.aligned if p.translate else None
     return NodeInfo(sch, min(int(p.capacity), c.card), c.sorted_by,
-                    c.clustered_by, None, translated)
+                    c.clustered_by, None, translated, c.part, c.shards)
+
+
+def _derive_exchange(p: ir.Exchange, sch, db, kids) -> NodeInfo:
+    c = kids[0]
+    # tiled all-gather: every shard ends up with the full frame — card
+    # multiplies by the mesh size and the partition is gone.  Positional
+    # alignment survives ONLY for the root's padded row-range layout
+    # (position == global row id); a routed child's gathered rows stay
+    # owner-permuted.  Per-shard sort order does not concatenate into a
+    # global order, so sortedness/clustering are dropped.
+    aligned = c.aligned if c.aligned is not None and c.part == c.aligned \
+        else None
+    return NodeInfo(sch, c.card * max(c.shards, 1), aligned=aligned,
+                    shards=c.shards)
 
 
 def _derive_join(p, sch, db, kids) -> NodeInfo:
     # every strategy emits the stream's physical frame (build columns
     # are gathered into it), so stream properties carry through
-    s = kids[0]
-    return NodeInfo(sch, s.card, s.sorted_by, s.clustered_by, s.aligned)
+    s, b = kids
+    return NodeInfo(sch, s.card, s.sorted_by, s.clustered_by, s.aligned,
+                    part=s.part, shards=max(s.shards, b.shards))
 
 
 def _derive_agg(p: ir.Agg, sch, db, kids) -> NodeInfo:
+    # every strategy's output is replicated: scalar/dense combine
+    # shard-local partials in-operator (psum/pmin/pmax), and generic
+    # requires a gathered input (verifier's shard-invariance rule)
     c = kids[0]
     if p.strategy == "scalar" or not p.group_by:
-        return NodeInfo(sch, 1)
+        return NodeInfo(sch, 1, shards=c.shards)
     order = tuple((g, True) for g in p.group_by)
     if p.strategy == "dense":
         card = 1
@@ -170,18 +205,20 @@ def _derive_agg(p: ir.Agg, sch, db, kids) -> NodeInfo:
                 # dense agg keyed on a full PK domain: output row id
                 # IS the key value (Q18's agg-as-build side)
                 aligned = ci.parent
-        return NodeInfo(sch, card, order, aligned=aligned)
-    return NodeInfo(sch, c.card, order)
+        return NodeInfo(sch, card, order, aligned=aligned, shards=c.shards)
+    return NodeInfo(sch, c.card, order, shards=c.shards)
 
 
 def _derive_sort(p: ir.Sort, sch, db, kids) -> NodeInfo:
-    return NodeInfo(sch, kids[0].card, tuple(p.keys))
+    c = kids[0]
+    return NodeInfo(sch, c.card, tuple(p.keys), part=c.part, shards=c.shards)
 
 
 def _derive_limit(p: ir.Limit, sch, db, kids) -> NodeInfo:
     c = kids[0]
     n = p.n if isinstance(p.n, int) else c.card
-    return NodeInfo(sch, min(int(n), c.card), c.sorted_by, c.clustered_by)
+    return NodeInfo(sch, min(int(n), c.card), c.sorted_by, c.clustered_by,
+                    part=c.part, shards=c.shards)
 
 
 # type dispatch, mirroring schema._SCHEMA_FNS: analyze() runs once per
@@ -191,6 +228,7 @@ _DERIVE_FNS = {
     ir.Select: _derive_select,
     ir.Project: _derive_project,
     ir.Compact: _derive_compact,
+    ir.Exchange: _derive_exchange,
     ir.Join: _derive_join,
     ir.Agg: _derive_agg,
     ir.Sort: _derive_sort,

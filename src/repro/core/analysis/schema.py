@@ -262,6 +262,7 @@ _SCHEMA_FNS = {
     ir.Scan: _scan_schema,
     ir.Select: _passthrough_schema,
     ir.Compact: _passthrough_schema,
+    ir.Exchange: _passthrough_schema,
     ir.Sort: _passthrough_schema,
     ir.Limit: _passthrough_schema,
     ir.Project: _project_schema,

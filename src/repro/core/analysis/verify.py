@@ -479,6 +479,179 @@ def _param_dtypes(plan, db, settings, a: Analysis):
                     f"got dtype {node.n.dtype!r}", node)
 
 
+def _strip_transparent(node: ir.Plan) -> ir.Plan:
+    """Descend through frame-transparent wrappers (Compact re-packs rows,
+    Project adds columns — neither changes the partition state), so the
+    Exchange rules see the node a consumer physically reads."""
+    while isinstance(node, (ir.Compact, ir.Project)):
+        node = node.child
+    return node
+
+
+def _co_partitioned(j: ir.Join, build_info, stream_info) -> bool:
+    """pk_gather crosses no shard boundary iff the probe side is
+    partitioned on the build table's own range partition."""
+    return (build_info.part is not None
+            and stream_info.part == build_info.part
+            and build_info.part == j.build_table)
+
+
+@rule("shard-invariance")
+
+
+def _shard_invariance(plan, db, settings, a: Analysis):
+    """No partitioned frame reaches an operator whose lowering would see
+    only a shard-local slice: global Sort/Limit, generic (sort-based)
+    aggregation, generic/bucket_gather join builds, pk_gather builds not
+    co-partitioned with their probe side, and the plan output itself.
+    The Sharding pass plants a gather Exchange at each of these sites —
+    this rule turns a missing one into a verify failure instead of a
+    silently partial answer.  exists_flag builds and scalar/dense Agg
+    inputs may stay partitioned: their operators combine shard-local
+    partials in place (pmax flag union resp. psum/pmin/pmax)."""
+    for node in ir.walk(plan):
+        if isinstance(node, (ir.Sort, ir.Limit)):
+            ci = a.info(node.child)
+            if ci.part is not None:
+                yield Violation(
+                    "shard-invariance",
+                    f"{type(node).__name__} over a frame partitioned on "
+                    f"{ci.part!r} — a per-shard order is not a global "
+                    "order", node)
+        elif isinstance(node, ir.Agg):
+            if node.strategy in ("scalar", "dense") or not node.group_by:
+                continue
+            ci = a.info(node.child)
+            if ci.part is not None:
+                yield Violation(
+                    "shard-invariance",
+                    "generic (sort-based) Agg over a frame partitioned on "
+                    f"{ci.part!r} — shard-local groups would not merge",
+                    node)
+        elif isinstance(node, ir.Join):
+            bi = a.info(node.build)
+            if bi.part is None or node.strategy == "exists_flag":
+                continue
+            if node.strategy == "pk_gather":
+                if not _co_partitioned(node, bi, a.info(node.stream)):
+                    yield Violation(
+                        "shard-invariance",
+                        f"pk_gather build partitioned on {bi.part!r} is "
+                        "not co-partitioned with its probe side "
+                        f"(stream part={a.info(node.stream).part!r}, "
+                        f"build_table={node.build_table!r})", node)
+            else:
+                yield Violation(
+                    "shard-invariance",
+                    f"{node.strategy} join build partitioned on "
+                    f"{bi.part!r} — the strategy reads the whole build "
+                    "frame", node)
+    if a.info(plan).part is not None:
+        yield Violation(
+            "shard-invariance",
+            f"plan output is partitioned on {a.info(plan).part!r} — the "
+            "caller sees one shard's block", plan)
+
+
+@rule("exchange-placement")
+
+
+def _exchange_placement(plan, db, settings, a: Analysis):
+    """Every Exchange is load-bearing: a known kind, a partitioned child,
+    and a position directly below an eligible consumer (join build,
+    Sort/Limit, generic Agg, or the plan root — modulo frame-transparent
+    Compact/Project wrappers).  A co-partitioned pk_gather build must NOT
+    be gathered: the gather would materialize the full parent on every
+    shard and defeat the partitioning it verifies against."""
+    parents: dict[int, ir.Plan] = {}
+    for node in ir.walk(plan):
+        for c in ir.children(node):
+            parents[id(c)] = node
+    for node in ir.walk(plan):
+        if isinstance(node, ir.Join) and node.strategy == "pk_gather":
+            below = _strip_transparent(node.build)
+            if isinstance(below, ir.Exchange):
+                if _co_partitioned(node, a.info(below.child),
+                                   a.info(node.stream)):
+                    yield Violation(
+                        "exchange-placement",
+                        "gather Exchange on a co-partitioned pk_gather "
+                        "build — the probe is already shard-local", node)
+        if not isinstance(node, ir.Exchange):
+            continue
+        if node.kind != "gather":
+            yield Violation(
+                "exchange-placement",
+                f"unknown Exchange kind {node.kind!r}", node)
+        if a.info(node.child).part is None:
+            yield Violation(
+                "exchange-placement",
+                "Exchange over a replicated frame — nothing to gather",
+                node)
+        cur, par = node, parents.get(id(node))
+        while par is not None and isinstance(par, (ir.Compact, ir.Project)):
+            cur, par = par, parents.get(id(par))
+        ok = (par is None
+              or isinstance(par, (ir.Sort, ir.Limit))
+              or (isinstance(par, ir.Join) and par.build is cur
+                  and par.strategy != "exists_flag")
+              or (isinstance(par, ir.Agg)
+                  and par.strategy not in ("scalar", "dense")
+                  and bool(par.group_by)))
+        if not ok:
+            yield Violation(
+                "exchange-placement",
+                f"Exchange below {type(par).__name__} — not an eligible "
+                "consumer (join build, Sort/Limit, generic Agg, or plan "
+                "root)", node)
+
+
+@rule("exchange-count", final_only=True)
+
+
+def _exchange_count(plan, db, settings, a: Analysis):
+    """Per-query Exchange budget: at most one per co-partitioning
+    violation — non-co-partitioned join builds, global Sort/Limit and
+    generic Agg inputs that are partitioned, and a partitioned plan
+    output.  With exchange-placement pinning each Exchange directly
+    below such a site, a pass that starts spraying gathers fails
+    verification instead of silently serializing the query."""
+    n_exchange = sum(isinstance(n, ir.Exchange) for n in ir.walk(plan))
+    if n_exchange == 0:
+        return
+    sites = 0
+    for node in ir.walk(plan):
+        if isinstance(node, ir.Join):
+            if node.strategy == "exists_flag":
+                continue
+            below = _strip_transparent(node.build)
+            inner = below.child if isinstance(below, ir.Exchange) else below
+            ii = a.info(inner)
+            if ii.part is None:
+                continue
+            if node.strategy == "pk_gather" and _co_partitioned(
+                    node, ii, a.info(node.stream)):
+                continue
+            sites += 1
+        elif isinstance(node, (ir.Sort, ir.Limit)) or (
+                isinstance(node, ir.Agg)
+                and node.strategy not in ("scalar", "dense")
+                and node.group_by):
+            below = _strip_transparent(node.child)
+            inner = below.child if isinstance(below, ir.Exchange) else below
+            if a.info(inner).part is not None:
+                sites += 1
+    top = _strip_transparent(plan)
+    top_in = top.child if isinstance(top, ir.Exchange) else top
+    if a.info(top_in).part is not None:
+        sites += 1
+    if n_exchange > sites:
+        yield Violation(
+            "exchange-count",
+            f"{n_exchange} Exchange nodes for {sites} co-partitioning "
+            "violations — at least one gather is gratuitous", plan)
+
+
 @rule("key-pack", final_only=True)
 
 

@@ -61,6 +61,28 @@ class NumpyBackend:
     def searchsorted(a, v):
         return np.searchsorted(a, v)
 
+    # -- mesh collectives: identity on the single-sample collection walk,
+    # -- so sharded staging decisions see a plain one-shard world
+    @staticmethod
+    def psum(x, axis):
+        return x
+
+    @staticmethod
+    def pmax(x, axis):
+        return x
+
+    @staticmethod
+    def pmin(x, axis):
+        return x
+
+    @staticmethod
+    def all_gather(x, axis, tiled=False):
+        return x if tiled else np.asarray(x)[None]
+
+    @staticmethod
+    def axis_index(axis):
+        return np.int32(0)
+
 
 class JaxBackend:
     name = "jax"
@@ -136,3 +158,31 @@ class JaxBackend:
         import jax.numpy as jnp
 
         return jnp.searchsorted(a, v)
+
+    # -- mesh collectives (only traced inside shard_map: `axis` must be a
+    # -- bound mesh axis name, which compile.py guarantees by setting
+    # -- StageCtx.axis iff the staged fn is shard_map-wrapped)
+    def psum(self, x, axis):
+        import jax
+
+        return jax.lax.psum(x, axis)
+
+    def pmax(self, x, axis):
+        import jax
+
+        return jax.lax.pmax(x, axis)
+
+    def pmin(self, x, axis):
+        import jax
+
+        return jax.lax.pmin(x, axis)
+
+    def all_gather(self, x, axis, tiled=False):
+        import jax
+
+        return jax.lax.all_gather(x, axis, tiled=tiled)
+
+    def axis_index(self, axis):
+        import jax
+
+        return jax.lax.axis_index(axis)

@@ -58,6 +58,7 @@ import numpy as np
 from repro.core import ir
 from repro.core.backend import JaxBackend, NumpyBackend
 from repro.core.expr import Param
+from repro.core.mesh import AXIS, data_mesh, resolve_shards, shard_map_fn
 from repro.core.operators import StageCtx, frame_nrows
 from repro.core.passes.param_binding import plan_params
 from repro.core.passes.pipeline import Settings, optimize
@@ -141,6 +142,10 @@ class CompiledQuery:
         self.compaction_points = len(real)
         self.capacities = tuple(n.capacity for n in real)
         self.point_caps = {n.point_id: int(n.capacity) for n in real}
+        # translate points carry the key→slot contract whose overflow
+        # drops whole-query results: PlanCache's shrink decay exempts them
+        # so their capacities floor at the all-time measured max
+        self.translate_points = {n.point_id for n in real if n.translate}
         self.measure_points = len(compacts) - len(real)
         self._pristine = pristine if self.compaction_points else None
         self._fallback: Optional["CompiledQuery"] = None
@@ -151,9 +156,21 @@ class CompiledQuery:
         # consecutive all-points-underused executions with its window max
         self._obs_lock = threading.Lock()
         self.observed_max: dict[str, int] = {}
+        # per-shard all-time max vectors (shape (n_shards,)) — the sharded
+        # program reports every point's count per shard, and the skew
+        # between slots is what the bench/feedback surfaces read
+        self.observed_shard: dict[str, np.ndarray] = {}
         self.under_streak = 0     # consecutive executions, every point <cap/4
         self.streak_max: dict[str, int] = {}   # max counts within the streak
         self._cache_key: Optional[tuple] = None   # set by PlanCache
+
+        # sharded execution: the Sharding pass resolved the same settings,
+        # so the mesh shape here matches the per-shard capacities it
+        # planted.  The staged fn is shard_map-wrapped below; partitioned
+        # inputs are device_put with a NamedSharding after the collection
+        # walk so jit consumes them without host-side resharding.
+        self.n_shards = resolve_shards(settings)
+        self._mesh = data_mesh(self.n_shards) if self.n_shards > 1 else None
 
         spec = plan_params(self.plan)
         structural = sorted(n for n, i in spec.items() if i.structural)
@@ -179,15 +196,27 @@ class CompiledQuery:
             v = self.inputs[key]
             return v if v.ndim == 0 else v[:_SAMPLE]   # params are scalars
 
+        sp = db.shard_plan(self.n_shards) if self.n_shards > 1 else None
+        axis = AXIS if self._mesh is not None else None
         sampler = StageCtx(db, settings, NumpyBackend(), collect_input,
-                           self.param_defaults)
+                           self.param_defaults, axis=axis,
+                           n_shards=self.n_shards, shard_plan=sp)
         sample_frame = sampler.stage(self.plan)
         self.out_meta = [(name, b.kind, b.table, b.col)
                          for name, b in sample_frame.cols.items()]
+        # input keys whose arrays are partitioned over the data axis
+        # (registered by sharded Scans during the collection walk)
+        self.sharded_keys = frozenset(sampler.sharded_keys)
         # a dead-but-declared param would desync the jit input tree:
         # register every declared param unconditionally.
         for name, dtype in self.param_spec.items():
             sampler.param(Param(name, dtype))
+        if self._mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            ns = NamedSharding(self._mesh, PartitionSpec(AXIS))
+            for k in self.sharded_keys:
+                self.inputs[k] = jax.device_put(self.inputs[k], ns)
 
         # 2. the staged program.  `body` is the staged walk shared by the
         #    scalar and the batched entry point; the entry points differ
@@ -201,7 +230,8 @@ class CompiledQuery:
         def body(inputs, batched=False):
             ctx = StageCtx(db, settings, JaxBackend(),
                            lambda key, make: inputs[key],
-                           self.param_defaults, batched=batched)
+                           self.param_defaults, batched=batched,
+                           axis=axis, n_shards=self.n_shards, shard_plan=sp)
             frame = ctx.stage(self.plan)
             out = {name: b.arr for name, b in frame.cols.items()}
             n = frame_nrows(frame)
@@ -210,8 +240,16 @@ class CompiledQuery:
             # third program output: every compaction point's TRUE valid
             # count, keyed by point id (empty dict when the plan has
             # none).  count > capacity is the overflow signal; the counts
-            # feed the plan cache's capacity feedback either way.
-            return out, mask, dict(ctx.compact_counts)
+            # feed the plan cache's capacity feedback either way.  Under
+            # the mesh each count is a shard-local scalar — all-gather to
+            # a replicated (n_shards,) vector so the host sees per-shard
+            # demand (overflow = max over slots).
+            counts = dict(ctx.compact_counts)
+            if self._mesh is not None:
+                be = ctx.backend
+                counts = {pid: be.all_gather(c, AXIS)
+                          for pid, c in counts.items()}
+            return out, mask, counts
 
         def fn(inputs):
             self.n_traces += 1   # host side effect: runs only while tracing
@@ -231,9 +269,28 @@ class CompiledQuery:
             return jax.vmap(
                 lambda p: body({**base, **p}, batched=True))(pvec)
 
-        self.fn = fn
-        self._jitted = jax.jit(fn)
-        self._jitted_many = jax.jit(fn_many)
+        def shard_wrap(inner):
+            # the staged walk runs per shard under shard_map: partitioned
+            # inputs split along the data axis, everything else (params
+            # included) replicated.  Every output is replicated — the plan
+            # ends in combined aggregates or above a gather Exchange, and
+            # the counts are all-gathered in `body` — so out_specs is P().
+            # The in_specs dict is built per call because `bind` adds
+            # param/<name> keys the collection-time input set lacks.
+            from jax.sharding import PartitionSpec
+
+            def call(inputs):
+                specs = {k: (PartitionSpec(AXIS) if k in self.sharded_keys
+                             else PartitionSpec())
+                         for k in inputs}
+                return shard_map_fn(inner, self._mesh, in_specs=(specs,),
+                                    out_specs=PartitionSpec())(inputs)
+            return call
+
+        self.fn = fn if self._mesh is None else shard_wrap(fn)
+        self._jitted = jax.jit(self.fn)
+        self._jitted_many = jax.jit(
+            fn_many if self._mesh is None else shard_wrap(fn_many))
         self.stage_time = time.perf_counter() - t0
         self._compile_time: Optional[float] = None
 
@@ -329,6 +386,15 @@ class CompiledQuery:
                 if c > self.observed_max.get(pid, -1):
                     self.observed_max[pid] = c
 
+    def _observe_shards(self, vecs: dict[str, np.ndarray]) -> None:
+        """Elementwise-max merge of per-shard count vectors (shape
+        (n_shards,)) into the all-time per-shard state."""
+        with self._obs_lock:
+            for pid, v in vecs.items():
+                old = self.observed_shard.get(pid)
+                self.observed_shard[pid] = \
+                    v.copy() if old is None else np.maximum(old, v)
+
     def _observe(self, slot_counts: list[dict]) -> None:
         """Feedback accounting for a list of per-execution (or per-real-
         batch-slot) true-count dicts: all-time max per point, plus the
@@ -363,8 +429,14 @@ class CompiledQuery:
         self.n_executions += 1
         out, mask, counts = self._jitted(self.bind(params))
         if self.compaction_points or self.measure_points:
-            counts = {pid: int(np.asarray(c)) for pid, c in counts.items()}
+            # sharded programs report an (n_shards,) vector per point;
+            # overflow and the scalar feedback both key off the worst shard
+            vecs = {pid: np.atleast_1d(np.asarray(c)).reshape(-1)
+                    for pid, c in counts.items()}
+            counts = {pid: int(v.max()) for pid, v in vecs.items()}
             self._observe([counts])
+            if self.n_shards > 1:
+                self._observe_shards(vecs)
             if any(c > self.point_caps[pid] for pid, c in counts.items()
                    if pid in self.point_caps):
                 # a capacity bucket overflowed: the compacted frames
@@ -412,10 +484,17 @@ class CompiledQuery:
             # feedback observations, and the fallback re-runs: rows
             # nobody asked for must not trigger re-planning or wasted
             # uncompacted-twin executions
+            # per-point shapes: (B,) unsharded, (B, n_shards) sharded —
+            # np.max over a slot's entry covers both
             counts = {pid: np.asarray(c) for pid, c in counts.items()}
-            slot_counts = [{pid: int(v[i]) for pid, v in counts.items()}
+            slot_counts = [{pid: int(np.max(v[i]))
+                            for pid, v in counts.items()}
                            for i in range(n_real)]
             self._observe(slot_counts)
+            if self.n_shards > 1 and counts:
+                self._observe_shards(
+                    {pid: np.atleast_1d(np.max(v[:n_real], axis=0))
+                     for pid, v in counts.items()})
             bad = [i for i, sc in enumerate(slot_counts)
                    if any(c > self.point_caps[pid] for pid, c in sc.items()
                           if pid in self.point_caps)]
@@ -483,6 +562,14 @@ class CompiledQueryBatch:
     def __init__(self, plans, db: Database, settings: Settings):
         import jax
 
+        if resolve_shards(settings) != 1:
+            # each member would need its own shard_map scope and its own
+            # partitioned input aliases; cross-query CSE across shard_map
+            # boundaries buys nothing, so the combination is rejected
+            # rather than half-supported
+            raise NotImplementedError(
+                "CompiledQueryBatch does not compose with sharded "
+                "execution (Settings.shards != 1)")
         self.queries = [CompiledQuery(p, db, settings) for p in plans]
         self.inputs: dict[str, np.ndarray] = {}
         for q in self.queries:

@@ -29,12 +29,32 @@ class DateSlice:
 
 
 @dataclasses.dataclass
+class ShardInfo:
+    """Physical partitioning annotation (Sharding pass, §3.2.1 made
+    physical): the scan's rows live partitioned over the mesh's data axis.
+
+    `part` is the partition-root table — the range-partitioned parent
+    whose PK range decides row ownership.  The root itself has
+    `part == table` (row-range by dense PK, shard s owns rows
+    [s*P, (s+1)*P)); an FK child is hash-routed so every row lands on the
+    shard owning its parent (`owner = fk // P`).  Two scans with the same
+    `part` are co-partitioned: a pk_gather between them never crosses
+    shards.  `per_shard_rows` is the static padded per-shard row count
+    (the frame's physical height inside shard_map)."""
+    part: str
+    n_shards: int
+    per_shard_rows: int
+
+
+@dataclasses.dataclass
 class Scan:
     table: str
     # set by ColumnPruning: None = all columns
     columns: Optional[list[str]] = None
     # set by DateIndex: replaces the matching conjuncts of an enclosing Select
     date_slice: Optional[DateSlice] = None
+    # set by Sharding: table is partitioned over the data axis
+    shard: Optional[ShardInfo] = None
 
 
 @dataclasses.dataclass
@@ -135,6 +155,33 @@ class Compact:
 
 
 @dataclasses.dataclass
+class Exchange:
+    """Explicit cross-shard data movement (planted by the Sharding pass).
+
+    Sits between a partitioned producer and a consumer that needs a
+    different physical distribution.  Only planted where co-partitioning
+    is violated — generic/bucket_gather join builds, pk_gather builds
+    whose probe side is partitioned on a different root, global sorts,
+    generic (sort-based) aggregations, and the plan root.  Scalar and
+    dense aggregations do NOT get an Exchange: they combine shard-local
+    partials in-operator through psum/pmin/pmax.
+
+    kind:
+      gather — all-gather the shard blocks along the data axis so every
+               shard holds the full (global) frame; padded rows stay
+               masked out.  Because the partition is row-range over a
+               padded block layout, tiled all-gather reconstitutes global
+               positional order, so parent-table alignment properties are
+               restored (the verifier's Exchange rule relies on this).
+
+    `key` names the column the downstream consumer keys on (diagnostic —
+    a future repartition kind would hash on it)."""
+    child: "Plan"
+    key: Optional[str] = None
+    kind: str = "gather"
+
+
+@dataclasses.dataclass
 class Sort:
     child: "Plan"
     keys: list[tuple[str, bool]]  # (col, ascending)
@@ -148,7 +195,7 @@ class Limit:
     n: "int | object"
 
 
-Plan = Scan | Select | Project | Join | Agg | Compact | Sort | Limit
+Plan = Scan | Select | Project | Join | Agg | Compact | Exchange | Sort | Limit
 
 
 def children(p: Plan) -> list[Plan]:
@@ -187,6 +234,9 @@ def plan_repr(p: Plan, indent: int = 0) -> str:
             extra += f" date_slice[{ds.col}:{ds.lo}..{ds.hi}]"
         if p.columns is not None:
             extra += f" cols={p.columns}"
+        if p.shard is not None:
+            extra += (f" shard[{p.shard.part}x{p.shard.n_shards}"
+                      f"@{p.shard.per_shard_rows}]")
         return f"{pad}Scan({p.table}{extra})"
     if isinstance(p, Select):
         return f"{pad}Select\n{plan_repr(p.child, indent + 1)}"
@@ -220,6 +270,10 @@ def plan_repr(p: Plan, indent: int = 0) -> str:
         pid = f", point={p.point_id}" if p.point_id is not None else ""
         tr = ", translate" if p.translate else ""
         return (f"{pad}Compact(cap={p.capacity}{pid}{tr})\n"
+                f"{plan_repr(p.child, indent + 1)}")
+    if isinstance(p, Exchange):
+        key = f", key={p.key}" if p.key is not None else ""
+        return (f"{pad}Exchange[{p.kind}]({key.lstrip(', ')})\n"
                 f"{plan_repr(p.child, indent + 1)}")
     if isinstance(p, Sort):
         return f"{pad}Sort({p.keys})\n{plan_repr(p.child, indent + 1)}"

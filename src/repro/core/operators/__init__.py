@@ -6,8 +6,8 @@ twice (numpy collection walk, traced JAX walk) and wraps the result in a
 from __future__ import annotations
 
 from repro.core import ir
-from repro.core.operators import (agg, compact, join, limit, project, scan,
-                                  select, sort)
+from repro.core.operators import (agg, compact, exchange, join, limit,
+                                  project, scan, select, sort)
 from repro.core.operators.base import (Binding, Frame, FrameEnv, StageCtx,
                                        frame_nrows)
 
@@ -18,6 +18,7 @@ _DISPATCH = {
     ir.Join: join.stage,
     ir.Agg: agg.stage,
     ir.Compact: compact.stage,
+    ir.Exchange: exchange.stage,
     ir.Sort: sort.stage,
     ir.Limit: limit.stage,
 }

@@ -84,6 +84,9 @@ def _fused_stage(a: ir.Agg, f: Frame, pred, ctx: StageCtx):
     sums_m, cnt, _total = kops.selective_agg_query(
         cols_d, scalars, pred_fn, value_fns, gidx_fn, n_groups,
         interpret=ctx.settings.pallas_interpret)
+    if f.part is not None:
+        sums_m = ctx.backend.psum(sums_m, ctx.axis)
+        cnt = ctx.backend.psum(cnt, ctx.axis)
 
     def agg_col(spec, row):
         if spec.fn == "sum":
@@ -164,6 +167,9 @@ def stage(a: ir.Agg, ctx: StageCtx, defer: bool = False) -> Frame:
                 mask, xp.zeros((n,), dtype=np.int32),
                 [vals[nm].astype(np.float32) for nm in names], 1,
                 interpret=ctx.settings.pallas_interpret)
+            if f.part is not None:
+                sums_m = be.psum(sums_m, ctx.axis)
+                cnt = be.psum(cnt, ctx.axis)
             cols = {}
             for spec in a.aggs:
                 if spec.fn == "sum":
@@ -175,20 +181,40 @@ def stage(a: ir.Agg, ctx: StageCtx, defer: bool = False) -> Frame:
                          / xp.maximum(cnt[0:1], 1.0))
                 cols[spec.name] = Binding(v, "num")
             return ctx.barrier(Frame(cols, None))
+        # partitioned input: every reduction is computed over the local
+        # shard and combined with the matching collective BEFORE any
+        # finalization (avg divides psum(sum) by psum(count)), so the
+        # output is bit-identical on every shard — replicated, no Exchange
+        combine = f.part is not None
         cols = {}
         for spec in a.aggs:
             if spec.fn == "count":
-                v = mi32.sum()[None]
+                v = mi32.sum()
+                if combine:
+                    v = be.psum(v, ctx.axis)
+                v = v[None]
             elif spec.fn == "sum":
-                v = xp.where(mask, vals[spec.name], 0).sum()[None]
+                v = xp.where(mask, vals[spec.name], 0).sum()
+                if combine:
+                    v = be.psum(v, ctx.axis)
+                v = v[None]
             elif spec.fn == "avg":
                 sv = xp.where(mask, vals[spec.name], 0).sum()
                 cv = mi32.sum()
+                if combine:
+                    sv = be.psum(sv, ctx.axis)
+                    cv = be.psum(cv, ctx.axis)
                 v = (sv / xp.maximum(cv, 1).astype(np.float32))[None]
             elif spec.fn == "min":
-                v = xp.where(mask, vals[spec.name], F32BIG).min()[None]
+                v = xp.where(mask, vals[spec.name], F32BIG).min()
+                if combine:
+                    v = be.pmin(v, ctx.axis)
+                v = v[None]
             elif spec.fn == "max":
-                v = xp.where(mask, vals[spec.name], -F32BIG).max()[None]
+                v = xp.where(mask, vals[spec.name], -F32BIG).max()
+                if combine:
+                    v = be.pmax(v, ctx.axis)
+                v = v[None]
             cols[spec.name] = Binding(v, "num")
         return ctx.barrier(Frame(cols, None))
 
@@ -216,33 +242,46 @@ def stage(a: ir.Agg, ctx: StageCtx, defer: bool = False) -> Frame:
             sums_m, cnt = kops.filter_agg_query(
                 mask, idx, [vals[nm].astype(np.float32) for nm in names], D,
                 interpret=ctx.settings.pallas_interpret)
+            if f.part is not None:
+                sums_m = be.psum(sums_m, ctx.axis)
+                cnt = be.psum(cnt, ctx.axis)
             kernel_sums = {nm: sums_m[:, i] for i, nm in enumerate(names)}
             kernel_counts = cnt
             present = (cnt > 0).astype(np.int32)
         else:
             present = be.segment_max(mi32, idx, D, 0)
+            if f.part is not None:
+                present = be.pmax(present, ctx.axis)
         cols: dict[str, Binding] = {}
         ar = xp.arange(D, dtype=np.int32)
         for g, d, stg in zip(a.group_by, a.domains, strides):
             b = f.cols[g]
             keyvals = (ar // np.int32(stg)) % np.int32(d)
             cols[g] = Binding(keyvals, b.kind, b.table, b.col)
+        combine = f.part is not None
         for c in a.carry:
             b = f.cols[c]
             if b.arr.ndim == 2:
                 data = xp.where(mask[:, None], b.arr, 0)
-                cols[c] = Binding(be.segment_max(data, idx, D, 0),
-                                  b.kind, b.table, b.col)
+                carried = be.segment_max(data, idx, D, 0)
             else:
                 if b.arr.dtype.kind == "f":
                     data = xp.where(mask, b.arr, -F32BIG)
-                    fill = np.float32(0)
+                    # the cross-shard combine below is a pmax: the
+                    # empty-slot fill must be max's identity, or a shard
+                    # holding none of a group's rows would beat the real
+                    # (negative) carry value with a 0
+                    fill = np.float32(-F32BIG) if combine else np.float32(0)
                 else:
                     data = xp.where(mask, b.arr, np.int32(-1)
                                     ).astype(b.arr.dtype)
-                    fill = np.array(0, b.arr.dtype)
-                cols[c] = Binding(be.segment_max(data, idx, D, fill),
-                                  b.kind, b.table, b.col)
+                    fill = np.array(-1 if combine else 0, b.arr.dtype)
+                carried = be.segment_max(data, idx, D, fill)
+            if combine:
+                # a group's rows may straddle shards; max-combining matches
+                # the single-device carry-via-max semantics
+                carried = be.pmax(carried, ctx.axis)
+            cols[c] = Binding(carried, b.kind, b.table, b.col)
         sums, counts, mins, maxs = {}, {}, {}, {}
         for spec in a.aggs:
             if spec.fn in ("sum", "avg"):
@@ -262,12 +301,27 @@ def stage(a: ir.Agg, ctx: StageCtx, defer: bool = False) -> Frame:
                 maxs[spec.name] = be.segment_max(
                     xp.where(mask, vals[spec.name], -F32BIG), idx, D,
                     -F32BIG)
+        if f.part is not None and kernel_sums is None:
+            # shard-local partials -> replicated totals, combined before
+            # _finalize so avg divides global sum by global count
+            sums = {k: be.psum(v, ctx.axis) for k, v in sums.items()}
+            counts = {k: be.psum(v, ctx.axis) for k, v in counts.items()}
+            mins = {k: be.pmin(v, ctx.axis) for k, v in mins.items()}
+            maxs = {k: be.pmax(v, ctx.axis) for k, v in maxs.items()}
         for spec in a.aggs:
             cols[spec.name] = Binding(
                 _finalize(spec, sums, counts, mins, maxs), "num")
         return ctx.barrier(Frame(cols, present > 0))
 
     # ---- generic sort-based grouping (the un-specialized hash map) ----
+    if f.part is not None:
+        from repro.core.analysis import PlanInvariantError
+
+        raise PlanInvariantError(
+            "shard-invariance",
+            "generic (sort-based) aggregation over a partitioned frame "
+            "would group each shard independently — needs a gather "
+            "Exchange", node=a, pass_name="staging")
     sort_keys: list = []   # major..minor
     for g in a.group_by:
         b = f.cols[g]

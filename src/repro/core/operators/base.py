@@ -50,10 +50,17 @@ class Frame:
     # side by key value (overflowed rows map past `capacity`; the join
     # drops them and the point's overflow flag triggers the fallback).
     slot_of: Any = None
+    # partition root table when this frame's rows are physically sharded
+    # over the mesh's data axis (see loader.ShardPlan); None = replicated.
+    # Set by the Scan operator from the Sharding pass's annotation and
+    # threaded through every operator identically in both walks — it is
+    # what tells a join to rebase positional indices, an aggregation to
+    # psum its partials, and an Exchange to all-gather.
+    part: Optional[str] = None
 
     def copy(self) -> "Frame":
         return Frame(dict(self.cols), self.mask, list(self.pending),
-                     self.capacity, self.slot_of)
+                     self.capacity, self.slot_of, self.part)
 
 
 def frame_nrows(f: Frame) -> int:
@@ -106,6 +113,17 @@ class StageCtx:
     # capacity feedback (re-plan/shrink from measured headroom).
     compact_counts: dict = dataclasses.field(default_factory=dict)
     n_compactions: int = 0        # Compact points actually staged this walk
+    # sharded execution (Settings.shards > 1): `axis` is the mesh axis name
+    # the staged fn is shard_map-wrapped over (None single-device — the
+    # numpy collection walk gets the axis too, where collectives are
+    # identities), `n_shards` its size, `shard_plan` the loader's
+    # co-partitioning layout.  `sharded_keys` collects the input keys whose
+    # arrays are partitioned over the axis — compile.py turns it into the
+    # shard_map in_specs.
+    axis: Optional[str] = None
+    n_shards: int = 1
+    shard_plan: Any = None
+    sharded_keys: set = dataclasses.field(default_factory=set)
 
     @property
     def xp(self):
@@ -159,7 +177,7 @@ class StageCtx:
                 for n, b in f.cols.items()}
         mask = None if f.mask is None else self.backend.barrier(f.mask)
         slot = None if f.slot_of is None else self.backend.barrier(f.slot_of)
-        return Frame(cols, mask, f.pending, f.capacity, slot)
+        return Frame(cols, mask, f.pending, f.capacity, slot, f.part)
 
 
 class FrameEnv(EvalEnv):

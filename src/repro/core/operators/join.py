@@ -49,8 +49,22 @@ def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
         else:
             idx = stream.cols[j.stream_key].arr
             bmask_g = None
+            if build.part is not None:
+                # co-partitioned build (root range partition): the FK is a
+                # *global* parent row id, the build frame holds only this
+                # shard's block [s*P, (s+1)*P) — rebase to the local row.
+                # A routed stream's keys land in-range by construction
+                # (ShardPlan sends every row to its parent's owner); the
+                # bound check still runs so hand-built plans fail masked,
+                # not silently wrong.
+                n_b = frame_nrows(build)
+                base = be.axis_index(ctx.axis) * np.int32(n_b)
+                local = idx - base
+                bmask_g = (local >= 0) & (local < n_b)
+                idx = xp.clip(local, 0, max(n_b - 1, 0))
             if build.mask is not None:
-                bmask_g = be.take(build.mask, idx)
+                got = be.take(build.mask, idx)
+                bmask_g = got if bmask_g is None else bmask_g & got
         cols = dict(stream.cols)
         for name, b in build.cols.items():
             if name in cols:
@@ -62,7 +76,7 @@ def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
         mask = stream.mask
         if j.kind != "left" and bmask_g is not None:
             mask = and_masks(xp, mask, bmask_g)
-        out = Frame(cols, mask)
+        out = Frame(cols, mask, part=stream.part)
         _apply_pending(out, build, ctx)
         return ctx.barrier(out)
 
@@ -71,6 +85,7 @@ def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
         # (§3.2.1): bucket on key1, discriminate on key2 within the
         # statically-bounded bucket width.
         build = ctx.stage(j.build, defer=not ctx.settings.hoist)
+        _require_replicated(j, build, "bucket_gather")
         w = j.bucket_width
         mat = ctx.input(
             f"{j.build_table}/fkbucket/{j.build_key}",
@@ -95,7 +110,7 @@ def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
             if name in cols:
                 continue
             cols[name] = Binding(be.take(b.arr, idx), b.kind, b.table, b.col)
-        out = Frame(cols, and_masks(xp, stream.mask, hit))
+        out = Frame(cols, and_masks(xp, stream.mask, hit), part=stream.part)
         _apply_pending(out, build, ctx)
         return ctx.barrier(out)
 
@@ -104,7 +119,14 @@ def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
         n_b = frame_nrows(build)
         bkey = build.cols[j.build_key].arr
         bm = build.mask if build.mask is not None else ones_mask(xp, n_b)
-        flags = be.segment_max(bm.astype(np.int32), bkey, j.domain, 0) > 0
+        flags = be.segment_max(bm.astype(np.int32), bkey, j.domain, 0)
+        if build.part is not None:
+            # partitioned build: each shard scattered only its local rows
+            # into the (global-domain) flag vector — union across shards.
+            # The dense flag array is permutation-safe, so no Exchange is
+            # needed for semi/anti membership.
+            flags = be.pmax(flags, ctx.axis)
+        flags = flags > 0
         hit = be.take(flags, stream.cols[j.stream_key].arr)
         if j.kind == "anti":
             hit = ~hit
@@ -113,6 +135,7 @@ def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
 
     # generic sort-based equi join (build keys unique: PK or group keys)
     build = ctx.stage(j.build)
+    _require_replicated(j, build, "generic")
     n_b = frame_nrows(build)
     if j.stream_key2 is not None:
         # composite key: pack into uint32 (k1·K2 + k2; bound documented)
@@ -150,7 +173,23 @@ def stage(j: ir.Join, ctx: StageCtx, defer: bool = False) -> Frame:
             g = xp.where(hit, g, 0)
         cols[name] = Binding(g, b.kind, b.table, b.col)
     mask = stream.mask if j.kind == "left" else and_masks(xp, stream.mask, hit)
-    return ctx.barrier(Frame(cols, mask))
+    return ctx.barrier(Frame(cols, mask, part=stream.part))
+
+
+def _require_replicated(j: ir.Join, build: Frame, strategy: str) -> None:
+    """Strategies that see only a shard-local slice of the build frame
+    would silently drop matches; the Sharding pass plants a gather
+    Exchange below them, so a partitioned build reaching staging is a
+    plan bug, not a data condition."""
+    if build.part is None:
+        return
+    from repro.core.analysis import PlanInvariantError
+
+    raise PlanInvariantError(
+        "shard-invariance",
+        f"{strategy} join build on {j.build_key!r} is partitioned "
+        f"(root={build.part}) — needs a gather Exchange",
+        node=j, pass_name="staging")
 
 
 def _stats_max(frame: Frame, key: str):

@@ -44,11 +44,11 @@ def stage(lim: ir.Limit, ctx: StageCtx, defer: bool = False) -> Frame:
             cols = {nm: Binding(be.take(b.arr, idx), b.kind, b.table,
                                 b.col) for nm, b in f.cols.items()}
             mask = None if f.mask is None else be.take(f.mask, idx)
-            sub = Frame(cols, mask)
+            sub = Frame(cols, mask, part=f.part)
             return sort_frame(sub, srt.keys, ctx)
     f = ctx.stage(lim.child)
     n = min(lim.n, frame_nrows(f))
     cols = {name: Binding(b.arr[:n], b.kind, b.table, b.col)
             for name, b in f.cols.items()}
     mask = None if f.mask is None else f.mask[:n]
-    return Frame(cols, mask)
+    return Frame(cols, mask, part=f.part)

@@ -18,6 +18,25 @@ def stage(scan: ir.Scan, ctx: StageCtx, defer: bool = False) -> Frame:
     db, be, s = ctx.db, ctx.backend, ctx.settings
     t = db.table(scan.table)
     cols = scan.columns if scan.columns is not None else t.schema.column_names
+
+    # Sharding-pass annotation: this scan's arrays live partitioned over
+    # the data axis.  Partitioned copies are registered under shard-scoped
+    # input keys (so the same table can also feed a replicated scan in
+    # another plan without key collisions) and recorded in
+    # `ctx.sharded_keys` — compile.py turns that set into shard_map
+    # in_specs.  The pass never co-annotates a date_slice (the clustered
+    # permutation is global) so the two paths don't interact.
+    sp = None
+    if scan.shard is not None:
+        sp = db.shard_plan(scan.shard.n_shards)
+
+    def reg(suffix, thunk):
+        if sp is None:
+            return ctx.input(f"{scan.table}/{suffix}", thunk)
+        key = f"{scan.table}/shard{sp.n}/{suffix}"
+        ctx.sharded_keys.add(key)
+        return ctx.input(key, lambda: sp.col(scan.table, suffix, thunk))
+
     perm = None
     if scan.date_slice is not None:
         ds = scan.date_slice
@@ -33,9 +52,9 @@ def stage(scan: ir.Scan, ctx: StageCtx, defer: bool = False) -> Frame:
                    if t.schema.col(c).kind in (ColKind.INT, ColKind.FLOAT,
                                                ColKind.DATE)]
         if rowcols:
-            key = f"{scan.table}/rowmat/" + ",".join(rowcols)
-            rowmat = ctx.input(
-                key, lambda: np.stack(
+            rowmat = reg(
+                "rowmat/" + ",".join(rowcols),
+                lambda: np.stack(
                     [t.data[c].astype(np.float32) for c in rowcols], axis=1))
             # The barrier forces the full AoS record to be read before any
             # column is extracted (paper §3.3: rows can't skip attributes).
@@ -53,30 +72,34 @@ def stage(scan: ir.Scan, ctx: StageCtx, defer: bool = False) -> Frame:
                 if cdef.kind != ColKind.FLOAT:
                     arr = arr.astype(np.int32)
             else:
-                arr = ctx.input(f"{scan.table}/col/{c}", lambda c=c: t.data[c])
+                arr = reg(f"col/{c}", lambda c=c: t.data[c])
                 if perm is not None:
                     arr = be.take(arr, perm)
             bindings[c] = Binding(arr, "num", t, c)
         elif cdef.kind == ColKind.CAT:
             if s.string_dict:
-                arr = ctx.input(f"{scan.table}/col/{c}", lambda c=c: t.data[c])
+                arr = reg(f"col/{c}", lambda c=c: t.data[c])
                 kind = "codes"
             else:
-                arr = ctx.input(f"{scan.table}/chars/{c}",
-                                lambda c=c: t.char_matrix(c))
+                arr = reg(f"chars/{c}", lambda c=c: t.char_matrix(c))
                 kind = "chars"
             if perm is not None:
                 arr = be.take(arr, perm)
             bindings[c] = Binding(arr, kind, t, c)
         else:  # TEXT
             if s.string_dict:
-                arr = ctx.input(f"{scan.table}/col/{c}", lambda c=c: t.data[c])
+                arr = reg(f"col/{c}", lambda c=c: t.data[c])
                 kind = "words"
             else:
-                arr = ctx.input(f"{scan.table}/chars/{c}",
-                                lambda c=c: t.char_matrix(c))
+                arr = reg(f"chars/{c}", lambda c=c: t.char_matrix(c))
                 kind = "wordchars"
             if perm is not None:
                 arr = be.take(arr, perm)
             bindings[c] = Binding(arr, kind, t, c)
-    return Frame(bindings)
+
+    if sp is None:
+        return Frame(bindings)
+    mkey = f"{scan.table}/shard{sp.n}/mask"
+    ctx.sharded_keys.add(mkey)
+    mask = ctx.input(mkey, lambda: sp.valid_mask(scan.table))
+    return Frame(bindings, mask, part=scan.shard.part)

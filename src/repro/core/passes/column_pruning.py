@@ -29,7 +29,7 @@ def output_columns(p: ir.Plan, db: Database) -> set[str]:
         return s | output_columns(p.build, db)
     if isinstance(p, ir.Agg):
         return set(p.group_by) | set(p.carry) | {a.name for a in p.aggs}
-    if isinstance(p, (ir.Sort, ir.Limit, ir.Compact)):
+    if isinstance(p, (ir.Sort, ir.Limit, ir.Compact, ir.Exchange)):
         return output_columns(p.child, db)
     raise TypeError(type(p))
 
@@ -81,7 +81,8 @@ def _prune(p: ir.Plan, needed: set[str], db: Database) -> None:
     if isinstance(p, ir.Sort):
         _prune(p.child, needed | {k for k, _ in p.keys}, db)
         return
-    if isinstance(p, (ir.Limit, ir.Compact)):
+    if isinstance(p, (ir.Limit, ir.Compact, ir.Exchange)):
+        # an Exchange gathers whatever its child produces: no new needs
         _prune(p.child, needed, db)
         return
     raise TypeError(type(p))

@@ -118,6 +118,21 @@ def observed_bucket(count: int) -> int:
     return _bucket(float(count), 1.0)
 
 
+_TRANSLATE_MARGIN = 1.5
+
+
+def translate_bucket(count: int) -> int:
+    """Capacity for a measured count at a *translate* point.
+
+    A translate overflow is worse than a gather overflow: the pk_gather
+    probing `slot_of` silently drops rows past capacity, so the whole
+    query re-executes on the uncompacted twin — not just one frame.  The
+    floor therefore sits a margin *above* the all-time measured max (the
+    feedback store never decays translate observations), instead of the
+    just-above bucket that plain points get."""
+    return _bucket(float(count), _TRANSLATE_MARGIN)
+
+
 class Compaction:
     name = "Compaction"
 
@@ -197,7 +212,8 @@ def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool,
             # measured demand overrides the hand-chosen capacity (the
             # PR-5 bug: hand points were observed but never re-planned,
             # so an undershot hand capacity overflowed forever)
-            p.capacity = cap = observed_bucket(obs)
+            p.capacity = cap = (translate_bucket(obs) if p.translate
+                                else observed_bucket(obs))
         return p, Card(min(cap, c.phys), min(c.valid, float(cap)), True)
 
     if isinstance(p, ir.Join):
@@ -230,8 +246,11 @@ def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool,
             # a *translated* compact re-establishes key addressing over
             # the compacted build via the CSR slot_of vector (planted only
             # under Settings.use_pallas — gated inside _maybe_compact so
-            # the candidate-site numbering is preset-independent)
+            # the candidate-site numbering is preset-independent).  A
+            # partitioned build stays protected: slot_of would be built
+            # over the shard-local block but probed with global keys.
             build, bc = _maybe_compact(build, bc, ctx, _RATIO_ELEMENTWISE,
+                                       protect=_shard_count(build) > 1,
                                        translate=True)
         p.stream, p.build = stream, build
         if p.kind == "inner":
@@ -280,7 +299,25 @@ def _walk(p: ir.Plan, ctx: _Ctx, heavy: bool,
         n = p.n if isinstance(p.n, int) else c.phys
         return p, Card(min(n, c.phys), min(c.valid, float(n)), c.masked)
 
+    if isinstance(p, ir.Exchange):
+        # all-gather along the data axis: physical height and estimated
+        # valid mass both multiply by the shard count (each shard held a
+        # disjoint slice).  Anything planted *below* runs per shard —
+        # the per-shard capacity contract — and the consumer above this
+        # node sees the gathered cardinality when weighing its own point.
+        child, c = _walk(p.child, ctx, heavy, protect)
+        p.child = child
+        ns = _shard_count(child)
+        return p, Card(c.phys * ns, c.valid * ns, c.masked)
+
     raise TypeError(type(p))
+
+
+def _shard_count(p: ir.Plan) -> int:
+    """Mesh size of a partitioned subtree (1 when unsharded)."""
+    return max((s.shard.n_shards for s in ir.walk(p)
+                if isinstance(s, ir.Scan) and s.shard is not None),
+               default=1)
 
 
 def _bucket(est_rows: float, margin: float) -> int:
@@ -325,7 +362,8 @@ def _maybe_compact(node: ir.Plan, card: Card, ctx: _Ctx, ratio: int,
     if obs is not None:
         # measured headroom: the bucket just above the observed count
         # replaces both the static estimate and the static margin
-        cap = observed_bucket(obs)
+        # (translate points get a floored margin above their all-time max)
+        cap = translate_bucket(obs) if translate else observed_bucket(obs)
         est_valid = float(min(obs, cap))
     else:
         cap = _bucket(card.valid, s.compact_margin)
@@ -504,7 +542,7 @@ def _sel(e, plan, ctx: _Ctx) -> float:
             if pair is not None:
                 return pair    # measured 2-column range fraction
             if op in ("<", "<=", ">", ">="):
-                return 0.5     # cross-table inequality: textbook estimate
+                return _cross_sel(op, lhs.name, rhs.name, plan, ctx)
         return 1.0         # unbound Param / computed lhs: no knowledge
 
     if isinstance(e, E.CodeEq):
@@ -587,6 +625,36 @@ def _pair_sel(op: str, a: str, b: str, plan: ir.Plan, ctx: _Ctx
     if ta is None or tb is None or ta[0] is not tb[0]:
         return None
     return ta[0].pair_frac(ta[1], op, tb[1])
+
+
+def _cross_sel(op: str, a: str, b: str, plan: ir.Plan, ctx: _Ctx) -> float:
+    """Cross-table column inequality `a op b`: independence estimate from
+    the two marginal quantile sketches, replacing the textbook flat 0.5.
+
+    P(a <= b) = E_b[cdf_a(b)]; the knots of b's sketch are equi-depth, so
+    the plain mean of cdf_a over them IS that expectation up to one knot
+    interval of error.  Both integration directions are evaluated and the
+    result is clamped BY the textbook 0.5 (`min`): the measured fractions
+    can only tighten a downstream capacity, never loosen it past the
+    default — an undershoot re-plans through the overflow feedback, an
+    overshoot would waste capacity silently forever."""
+    ta, tb = _base_column(plan, a, ctx), _base_column(plan, b, ctx)
+    if ta is None or tb is None:
+        return 0.5
+    numeric = (ColKind.INT, ColKind.FLOAT, ColKind.DATE)
+    for t, cname in (ta, tb):
+        if t.schema.col(cname).kind not in numeric:
+            return 0.5
+    (t_a, ca), (t_b, cb) = ta, tb
+    le_ab = float(np.mean([t_a.cdf(ca, float(v))
+                           for v in t_b.quantile_sketch(cb)]))  # P(a <= b)
+    le_ba = float(np.mean([t_b.cdf(cb, float(v))
+                           for v in t_a.quantile_sketch(ca)]))  # P(b <= a)
+    if op in ("<", "<="):
+        est = min(le_ab, 1.0 - le_ba)
+    else:
+        est = min(1.0 - le_ab, le_ba)
+    return min(max(est, 0.01), 0.5)
 
 
 def _n_distinct(name: str, plan: ir.Plan, ctx: _Ctx) -> Optional[int]:

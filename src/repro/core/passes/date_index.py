@@ -25,8 +25,15 @@ class DateIndex:
     name = "DateIndex"
 
     def run(self, plan: ir.Plan, db: Database, settings) -> ir.Plan:
-        build_tables = _inner_build_tables(plan)
-        return _rewrite(plan, db, build_tables)
+        skip = _inner_build_tables(plan)
+        if getattr(settings, "shards", 1) != 1:
+            # a date-clustered permutation and a range/routed partition
+            # cannot compose (the global sort scrambles block ownership):
+            # the Sharding pass wins on the tables it will partition.
+            from repro.core.passes.sharding import partitioned_tables
+
+            skip = skip | partitioned_tables(db, settings)
+        return _rewrite(plan, db, skip)
 
 
 def _inner_build_tables(plan: ir.Plan) -> set[str]:

@@ -38,6 +38,12 @@ class Settings:
     hoist: bool = True              # §3.5 domain-specific code motion
     layout: str = "column"          # §3.3: 'column' (SoA) or 'row' (AoS)
     # --- beyond-paper ---------------------------------------------------------
+    # sharded execution over a 1-D device mesh (passes/sharding.py):
+    # 1 = single device (no mesh), 0 = auto (every visible device),
+    # n>1 = exactly n.  The resolved count joins the plan-cache key — the
+    # same plan at a different mesh shape is a different compiled program
+    # with different per-shard capacities.
+    shards: int = 1
     use_pallas: bool = False        # fuse hot paths into Pallas TPU kernels
     # Pallas kernel execution mode: None = auto (interpret only when no
     # TPU/GPU backend is present), True/False = forced.
@@ -112,6 +118,13 @@ def build_pipeline(settings: Settings, bindings: dict | None = None,
         pipeline.append(StringDictionary())
     if settings.cse:
         pipeline.append(FoldAndSimplify())
+    if settings.shards != 1:
+        # after the join/agg strategies are fixed (it keys off them) and
+        # before ColumnPruning (Exchange nodes are schema-transparent) /
+        # Compaction (capacities must be planned per shard).
+        from repro.core.passes.sharding import Sharding
+
+        pipeline.append(Sharding())
     if settings.column_pruning:
         pipeline.append(ColumnPruning())      # prune post-rewrite
     if settings.compaction:
@@ -180,6 +193,8 @@ def preset(name: str) -> Settings:
         return Settings()
     if name == "opt-pallas":     # beyond paper: + Pallas fused kernels
         return Settings(use_pallas=True)
+    if name == "opt-shard":      # beyond paper: + mesh-sharded execution
+        return Settings(shards=0)
     raise KeyError(name)
 
 

@@ -32,12 +32,26 @@ import weakref
 from collections import OrderedDict
 from typing import Optional
 
+import numpy as np
+
 from repro.core import compile as compile_mod
 from repro.core import ir
 from repro.core.compile import CompiledQuery
 from repro.core.passes.compaction import observed_bucket
 from repro.core.passes.param_binding import bind_plan, plan_params
 from repro.core.passes.pipeline import Settings, optimize
+
+
+def _mesh_size(settings: Settings) -> int:
+    """Resolved data-mesh size for the cache key.  `astuple(settings)`
+    already carries the raw `shards` field, but `shards=0` means "all
+    visible devices" — two processes (or one process whose device
+    visibility changed) must not share an entry staged for a different
+    mesh, so the key carries the *resolved* count.  `resolve_shards`
+    returns 1 without importing jax when sharding is off, keeping the
+    unsharded path jax-free at keying time."""
+    from repro.core.mesh import resolve_shards
+    return resolve_shards(settings)
 
 
 @dataclasses.dataclass
@@ -76,6 +90,11 @@ class _Feedback:
     overflows: int = 0                     # since the last re-plan
     replans: int = 0
     shrinks: int = 0
+    # pid -> per-shard max-count vector (np.ndarray of len n_shards),
+    # harvested from sharded entries.  Reporting surface only (benchmarks
+    # read it to chart skew); capacity planning keys on the scalar
+    # `observed` max, which bounds every shard by construction.
+    observed_shard: dict = dataclasses.field(default_factory=dict)
     # capacity generation: bumped by every re-plan/shrink transition so a
     # signature computed against pre-transition overrides (optimize runs
     # outside the lock) can never be memoized after the transition
@@ -146,7 +165,7 @@ class PlanCache:
         # away copy; the memo keys it on the other components, so only the
         # first request for a plan shape pays and warm hits stay walk-free.
         base = (repr(plan), dataclasses.astuple(settings),
-                self.db.fingerprint)
+                self.db.fingerprint, _mesh_size(settings))
         caps = self._capacity_signature(base, plan, settings, runtime)
         return base + (caps,), plan, runtime, owned
 
@@ -324,6 +343,15 @@ class PlanCache:
             observed = dict(cq.observed_max)
             under = cq.under_streak
             streak_max = dict(cq.streak_max)
+            shard_obs = {pid: v.copy()
+                         for pid, v in cq.observed_shard.items()}
+        # translate points are exempt from shrink decay: a translate
+        # overflow silently drops build rows the probe then misses (wrong
+        # answers, not just a fallback re-execution), so their capacity
+        # floors at the all-time max (`translate_bucket` in the pass) and
+        # the window-max decay below must never touch them
+        streak_max = {pid: c for pid, c in streak_max.items()
+                      if pid not in cq.translate_points}
         with self._lock:
             fb = self._feedback.get(base)
             if fb is None:
@@ -331,6 +359,11 @@ class PlanCache:
             for pid, c in observed.items():
                 if c > fb.observed.get(pid, -1):
                     fb.observed[pid] = c
+            for pid, v in shard_obs.items():
+                old = fb.observed_shard.get(pid)
+                fb.observed_shard[pid] = v if (
+                    old is None or old.shape != v.shape
+                ) else np.maximum(old, v)
             fb.overflows += overflow_delta
             if fb.overflows >= s.compact_replan_after:
                 fb.overrides = {**(fb.overrides or {}), **fb.observed}

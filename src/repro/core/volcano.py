@@ -251,6 +251,11 @@ class VolcanoEngine:
             # (capacity is a staged-engine static-shape concern)
             return self._exec(p.child, params)
 
+        if isinstance(p, ir.Exchange):
+            # single-interpreter execution holds the whole frame: a shard
+            # boundary is a no-op, same reasoning as Compact above
+            return self._exec(p.child, params)
+
         if isinstance(p, ir.Sort):
             rel = self._exec(p.child, params)
             keys = [rel.key_for_sort(name, asc) for name, asc in p.keys]

@@ -53,6 +53,7 @@ class Database:
         self._date_cluster: dict[tuple[str, str], tuple[np.ndarray, np.ndarray]] = {}
         self._slice_bounds: dict[tuple, tuple[int, int]] = {}
         self._device_cols: dict[tuple, object] = {}
+        self._shard_plans: dict[int, "ShardPlan"] = {}
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -75,6 +76,16 @@ class Database:
         self.tables = tables
         self._device_cols.clear()
         self.reset_aux()
+
+    # -- physical co-partitioning (§3.2.1 over a device mesh) ----------------
+    def shard_plan(self, n: int) -> "ShardPlan":
+        """The co-partitioning layout for an `n`-shard data mesh (cached:
+        partitioned column copies are shared by every compile at this
+        shard count)."""
+        got = self._shard_plans.get(n)
+        if got is None:
+            got = self._shard_plans[n] = ShardPlan(self, n)
+        return got
 
     # -- partitioning (§3.2.1) ----------------------------------------------
     def fk_csr(self, table: str, col: str) -> tuple[np.ndarray, np.ndarray]:
@@ -157,8 +168,131 @@ class Database:
         self._fk_csr.clear()
         self._date_cluster.clear()
         self._slice_bounds.clear()
+        self._shard_plans.clear()
         for t in self.tables.values():
             t._char_cache.clear()
+
+
+class ShardPlan:
+    """Physical co-partitioning layout for one shard count (§3.2.1 made
+    physical over a 1-D device mesh).
+
+    Policy (schema-driven, no per-query decisions): the largest table's
+    largest FK parent becomes the partition **root** — it is row-range
+    partitioned by its dense PK, shard s owning rows [s*P, (s+1)*P) with
+    P = ceil(nrows/n).  Every table holding a declared FK to the root is
+    **routed**: its rows are sent to the shard that owns their parent row
+    (`owner = fk // P`), so a PK/FK join between a routed child and the
+    root never crosses shards.  Everything else is replicated.  On TPC-H
+    this partitions orders (root) + lineitem (routed) — the two tables
+    that dominate memory — and replicates the dimension tables.
+
+    Physical layout contract (what shard_map and the Exchange operator
+    rely on):
+
+      * root — columns are padded to n*P rows by repeating row 0 at the
+        tail; padded position == global row id for every real row, so a
+        tiled all-gather reconstitutes global positional order and
+        parent-table *alignment* survives an Exchange.
+      * routed — rows are stably grouped by owner, each shard's block
+        padded to the max per-shard population L; a validity mask marks
+        pad rows.  Row order is permuted (alignment is lost), which is
+        sound because no routed table ever serves as a positional build
+        side — only parents do, and parents are either the root or
+        replicated.
+
+    Pad rows repeat a real row, so every operator treats them like any
+    other masked-out row — no NaN/sentinel hazards."""
+
+    def __init__(self, db: Database, n: int):
+        if n < 2:
+            raise ValueError("ShardPlan needs n >= 2")
+        self.db = db
+        self.n = int(n)
+        tables = db.tables
+        child = max(tables, key=lambda name: tables[name].nrows)
+        parents = [fk.ref_table for fk in tables[child].schema.foreign_keys]
+        self.root = (max(parents, key=lambda name: tables[name].nrows)
+                     if parents else child)
+        # P: root rows per shard (ceil)
+        self.block = -(-tables[self.root].nrows // self.n)
+        self.route_fk: dict[str, str] = {}
+        for tname, t in tables.items():
+            if tname == self.root:
+                continue
+            for fk in t.schema.foreign_keys:
+                if fk.ref_table == self.root:
+                    self.route_fk[tname] = fk.column
+                    break
+        self._index: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        self._cache: dict[tuple[str, str], np.ndarray] = {}
+
+    def part_of(self, table: str) -> Optional[str]:
+        """Partition root when `table` is partitioned, else None."""
+        if table == self.root or table in self.route_fk:
+            return self.root
+        return None
+
+    def rows_per_shard(self, table: str) -> Optional[int]:
+        """Static padded per-shard row count (None when replicated)."""
+        if table == self.root:
+            return self.block
+        if table in self.route_fk:
+            return self._routed_index(table)[1].shape[0] // self.n
+        return None
+
+    def _routed_index(self, table: str) -> tuple[np.ndarray, np.ndarray]:
+        """(idx, valid) of length n*L: position s*L+j of a partitioned
+        column is row idx[s*L+j] of the base table, pad where ~valid."""
+        got = self._index.get(table)
+        if got is None:
+            t = self.db.tables[table]
+            owner = t.data[self.route_fk[table]] // self.block
+            perm = np.argsort(owner, kind="stable").astype(np.int64)
+            counts = np.bincount(owner, minlength=self.n)
+            width = max(int(counts.max()) if len(counts) else 0, 1)
+            starts = np.zeros(self.n, dtype=np.int64)
+            np.cumsum(counts[:-1], out=starts[1:])
+            j = np.arange(self.n * width)
+            s, off = j // width, j % width
+            valid = off < counts[s]
+            src = np.minimum(starts[s] + off, max(t.nrows - 1, 0))
+            idx = np.where(valid, perm[src], 0)
+            got = self._index[table] = (idx, valid)
+        return got
+
+    def partition(self, table: str, arr: np.ndarray) -> np.ndarray:
+        """Padded partitioned copy of a per-row array (axis 0 = rows)."""
+        arr = np.asarray(arr)
+        if table == self.root:
+            pad = self.n * self.block - arr.shape[0]
+            if pad <= 0:
+                return arr
+            return np.concatenate(
+                [arr, np.repeat(arr[:1], pad, axis=0)], axis=0)
+        idx, _ = self._routed_index(table)
+        return arr[idx]
+
+    def col(self, table: str, key: str, thunk) -> np.ndarray:
+        """Memoized `partition(table, thunk())` — one partitioned copy per
+        (table, column key) shared across compiles."""
+        ck = (table, key)
+        got = self._cache.get(ck)
+        if got is None:
+            got = self._cache[ck] = self.partition(table, thunk())
+        return got
+
+    def valid_mask(self, table: str) -> np.ndarray:
+        if table == self.root:
+            n = self.db.tables[self.root].nrows
+            return np.arange(self.n * self.block) < n
+        return self._routed_index(table)[1]
+
+    def nbytes(self) -> int:
+        n = sum(a.nbytes for a in self._cache.values())
+        for idx, valid in self._index.values():
+            n += idx.nbytes + valid.nbytes
+        return n
 
 
 def loading_cost(db: Database, *, string_dict: bool, partition: bool,

@@ -1,5 +1,22 @@
 """Shared fixtures: one TPC-H database for the whole session (generation +
-auxiliary-structure builds dominate per-module setup cost otherwise)."""
+auxiliary-structure builds dominate per-module setup cost otherwise).
+
+Multi-device simulation: XLA fixes its device list at the first jax
+import, so the flag asking the CPU backend for 8 virtual devices must be
+in the environment before any test module (or the library under test)
+imports jax.  Conftest import runs first under pytest, making this the
+one reliable place; the guard keeps `pytest` usable from a REPL where
+jax is already loaded (sharded tests then skip via `needs_devices`).
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
 import pytest
 
 from repro.relational import Database
