@@ -14,7 +14,8 @@ def main() -> None:
                             bench_analysis, bench_batched_bindings,
                             bench_compaction, bench_compile, bench_kernels,
                             bench_ladder, bench_loading, bench_memory,
-                            bench_plan_cache, bench_roofline, bench_sharding)
+                            bench_plan_cache, bench_roofline, bench_serving,
+                            bench_sharding)
 
     quick = os.environ.get("REPRO_QUICK") == "1"
     print("name,us_per_call,derived")
@@ -44,6 +45,7 @@ def main() -> None:
         bench_ablation.run()
     bench_roofline.run()
     bench_sharding.run()
+    bench_serving.run()
     sys.stdout.flush()
 
 

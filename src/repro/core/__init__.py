@@ -11,9 +11,10 @@ organized in three layers (docs/architecture.md):
   volcano.py          — interpreted baseline engine (no compilation)
 """
 from repro.core.compile import CompiledQuery
-from repro.core.passes.pipeline import LADDER, Settings, optimize, preset
+from repro.core.passes.pipeline import (LADDER, Settings, degrade, optimize,
+                                        preset)
 from repro.core.plan_cache import PlanCache
 from repro.core.volcano import VolcanoEngine
 
 __all__ = ["CompiledQuery", "PlanCache", "VolcanoEngine", "Settings",
-           "optimize", "preset", "LADDER"]
+           "optimize", "preset", "degrade", "LADDER"]

@@ -195,7 +195,22 @@ def preset(name: str) -> Settings:
         return Settings(use_pallas=True)
     if name == "opt-shard":      # beyond paper: + mesh-sharded execution
         return Settings(shards=0)
+    if name == "mask-only":      # serving degradation rung: see degrade()
+        return degrade(Settings())
     raise KeyError(name)
+
+
+def degrade(settings: Settings) -> Settings:
+    """The serving degradation rung for `settings` (QueryServer's ladder,
+    docs §10): keep every semantic rewrite but drop the latency-tuning
+    machinery whose compile cost is unaffordable under overload —
+    compaction (capacity planning + gather points), its adaptive
+    feedback (re-plans retrace), and the per-optimize pass verifier.
+    Frames stay mask-only, so results are bit-identical; only the
+    padded-row waste changes.  Because `Settings` joins the plan-cache
+    key, degraded entries coexist with full entries for the same plan."""
+    return dataclasses.replace(settings, compaction=False,
+                               compact_feedback=False, verify_passes=False)
 
 
 LADDER = ["dbx", "naive", "tpch", "strdict", "opt"]

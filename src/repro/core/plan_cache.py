@@ -77,6 +77,11 @@ class CacheStats:
     # `compact_shrink_after` consecutive large underuses).
     replans: int = 0
     shrinks: int = 0
+    # serving degradation (serve/query_server.py's ladder): requests
+    # prepared against degraded (mask-only, `pipeline.degrade`) settings.
+    # Degraded settings key distinct cache entries, so a degraded rung
+    # never evicts or pollutes the full-fidelity entry for the same plan.
+    degraded: int = 0
 
 
 @dataclasses.dataclass
@@ -244,6 +249,13 @@ class PlanCache:
     def contains(self, key: tuple) -> bool:
         with self._lock:
             return key in self._entries
+
+    def note_degraded(self, n: int = 1) -> None:
+        """Count `n` requests served against degraded (mask-only) settings
+        — called by QueryServer's shed-to-degraded-plan rung so cache
+        stats expose how much traffic ran below full fidelity."""
+        with self._lock:
+            self.stats.degraded += n
 
     # -- the cache -------------------------------------------------------------
     def _get_prepared(self, key: tuple, plan: ir.Plan, runtime: dict,

@@ -72,6 +72,13 @@ class Table:
                 if arr.size:
                     st.min = float(arr.min())
                     st.max = float(arr.max())
+                if cdef.kind in (ColKind.INT, ColKind.DATE) and arr.size:
+                    # exact distinct count (one np.unique at load time):
+                    # feeds the compaction planner's group-count estimate
+                    # for dense aggregations over key columns, where the
+                    # static domain bound (parent row count) can be far
+                    # above the live key population
+                    st.n_distinct = int(np.unique(arr).size)
                 if cdef.kind == ColKind.DATE and arr.size:
                     yrs = arr.astype("datetime64[D]").astype("datetime64[Y]")
                     st.years = np.unique(yrs).astype(np.int64) + 1970

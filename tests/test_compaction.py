@@ -204,3 +204,46 @@ def test_cache_counts_compactions_and_overflows(db):
     cache.execute(plan, preset("opt"))
     assert cache.stats.compactions == 3
     assert cache.stats.overflows == 1
+
+
+# ---------------------------------------------------------------------------
+# dense-agg group-count estimate (ROADMAP residual: q3 top-k)
+# ---------------------------------------------------------------------------
+
+def test_dense_agg_output_compacts_before_sort(db):
+    """The balls-in-bins group estimate (live key population from join
+    match fractions x distinct-count stats) must come in tight enough to
+    plant a Compact between q3's Sort and its dense Agg — the naive
+    min(valid rows, domain) bound never did — without overflowing, and
+    with oracle-identical results."""
+    cq = CompiledQuery(QUERIES["q3"](), db, preset("opt"))
+    planted = [n for n in ir.walk(cq.plan) if isinstance(n, ir.Sort)
+               and isinstance(n.child, Compact)
+               and isinstance(n.child.child, Agg)
+               and n.child.child.strategy == "dense"]
+    assert planted, "no Compact planted between Sort and the dense Agg"
+    point = planted[0].child
+    domain = 1
+    for d in planted[0].child.child.domains:
+        domain *= d
+    # the win the planner demands: capacity at least 2x under the
+    # uncompacted dense output the Sort would otherwise consume
+    assert point.capacity * 2 <= domain
+    got = cq.run()
+    assert cq.n_overflows == 0, f"overflowed {cq.capacities}"
+    assert_same(got, VolcanoEngine(db).execute(QUERIES["q3"]()),
+                sort_insensitive=True)
+
+
+def test_dense_group_estimate_tightens_but_stays_safe(db):
+    """Param-bound q3 under both default and alternative bindings: the
+    tightened capacities must neither overflow nor drift from the oracle
+    (the estimate only narrows capacity, never correctness)."""
+    build, defaults = PARAM_QUERIES["q3"]
+    cache = PlanCache(db)
+    oracle = VolcanoEngine(db)
+    for bindings in (defaults, dict(defaults, **ALT_BINDINGS["q3"])):
+        got = cache.execute(build(), preset("opt"), bindings)
+        assert_same(got, oracle.execute(build(), bindings),
+                    sort_insensitive=True)
+    assert cache.stats.overflows == 0
