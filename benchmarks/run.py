@@ -15,7 +15,7 @@ def main() -> None:
                             bench_compaction, bench_compile, bench_kernels,
                             bench_ladder, bench_loading, bench_memory,
                             bench_plan_cache, bench_roofline, bench_serving,
-                            bench_sharding)
+                            bench_sharding, bench_tiering)
 
     quick = os.environ.get("REPRO_QUICK") == "1"
     print("name,us_per_call,derived")
@@ -46,6 +46,7 @@ def main() -> None:
     bench_roofline.run()
     bench_sharding.run()
     bench_serving.run()
+    bench_tiering.run()
     sys.stdout.flush()
 
 

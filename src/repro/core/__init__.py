@@ -7,14 +7,26 @@ organized in three layers (docs/architecture.md):
   compile.py          — the staging driver producing one XLA program
                         (scalar and vmapped bind-many entry points)
   plan_cache.py       — runtime: compile-once / bind-many plan cache,
-                        batched `execute_many` over plan-key groups
-  volcano.py          — interpreted baseline engine (no compilation)
+                        batched `execute_many` over plan-key groups;
+                        tier-aware cold serving + background promotion
+  volcano.py          — interpreted baseline engine (no compilation);
+                        `OracleQuery` is the tier ladder's bottom rung
+  tiering.py          — the execution-tier ladder (oracle -> interpret
+                        -> compiled -> opt-pallas) + Runnable protocol
+  persist.py          — warm-state persistence (feedback store + warm
+                        metadata; JAX compilation-cache wiring)
 """
 from repro.core.compile import CompiledQuery
 from repro.core.passes.pipeline import (LADDER, Settings, degrade, optimize,
                                         preset)
+from repro.core.persist import enable_compilation_cache
 from repro.core.plan_cache import PlanCache
-from repro.core.volcano import VolcanoEngine
+from repro.core.tiering import (COMPILED, INTERPRET, OPT_PALLAS, ORACLE,
+                                TIERS, ExecutionTier, Runnable, TierLadder)
+from repro.core.volcano import OracleQuery, VolcanoEngine
 
-__all__ = ["CompiledQuery", "PlanCache", "VolcanoEngine", "Settings",
-           "optimize", "preset", "degrade", "LADDER"]
+__all__ = ["CompiledQuery", "PlanCache", "VolcanoEngine", "OracleQuery",
+           "Settings", "optimize", "preset", "degrade", "LADDER",
+           "ExecutionTier", "TierLadder", "Runnable", "TIERS",
+           "ORACLE", "INTERPRET", "COMPILED", "OPT_PALLAS",
+           "enable_compilation_cache"]

@@ -90,6 +90,12 @@ class CompiledQuery:
     construction — pass `bindings` to `optimize`, or go through
     `PlanCache`."""
 
+    # tiering.Runnable surface: batched execution pads to pow2 buckets
+    # (PlanCache.run_many charges the pad slots), and the tier name
+    # defaults from the settings — the tiered cache overwrites it when it
+    # builds this program as a specific ladder rung (e.g. 'interpret').
+    pads_batches = True
+
     def __init__(self, plan: ir.Plan, db: Database, settings: Settings,
                  params: Optional[dict] = None,
                  est_params: Optional[dict] = None,
@@ -102,6 +108,7 @@ class CompiledQuery:
 
         self.db = db
         self.settings = settings
+        self.tier_name = "opt-pallas" if settings.use_pallas else "compiled"
         # compaction plants static-capacity points from cardinality
         # *estimates*; keep a pristine copy of the logical plan so an
         # estimate that undershoots at runtime (the overflow flag) can

@@ -45,32 +45,44 @@ def stage(scan: ir.Scan, ctx: StageCtx, defer: bool = False) -> Frame:
                           lambda: db.date_cluster(scan.table, ds.col)[0])
         perm = pfull[min(start, pfull.shape[0]):min(end, pfull.shape[0])]
 
-    rowmat = None
-    rowcols: list[str] = []
+    rowmats: dict[str, tuple] = {}   # dtype group -> (record matrix, cols)
     if s.layout == "row":
-        rowcols = [c for c in cols
-                   if t.schema.col(c).kind in (ColKind.INT, ColKind.FLOAT,
-                                               ColKind.DATE)]
-        if rowcols:
-            rowmat = reg(
-                "rowmat/" + ",".join(rowcols),
-                lambda: np.stack(
-                    [t.data[c].astype(np.float32) for c in rowcols], axis=1))
+        # One record matrix PER DTYPE GROUP: stacking INT/DATE columns
+        # into a single float32 matrix silently corrupts any integer
+        # above 2^24 (float32 carries a 24-bit significand), so keys and
+        # wide counters round-trip wrong.  Splitting keeps the AoS
+        # discipline — every column in a group is materialized as one
+        # record read — without laundering ints through floats.
+        groups: dict[str, list[str]] = {"int": [], "float": []}
+        for c in cols:
+            k = t.schema.col(c).kind
+            if k in (ColKind.INT, ColKind.DATE):
+                groups["int"].append(c)
+            elif k == ColKind.FLOAT:
+                groups["float"].append(c)
+        for g, gcols in groups.items():
+            if not gcols:
+                continue
+            dt = np.int32 if g == "int" else np.float32
+            mat = reg(
+                f"rowmat/{g}/" + ",".join(gcols),
+                lambda gcols=gcols, dt=dt: np.stack(
+                    [t.data[c].astype(dt) for c in gcols], axis=1))
             # The barrier forces the full AoS record to be read before any
             # column is extracted (paper §3.3: rows can't skip attributes).
-            rowmat = be.barrier(rowmat)
+            mat = be.barrier(mat)
             if perm is not None:
-                rowmat = be.barrier(be.take(rowmat, perm))
+                mat = be.barrier(be.take(mat, perm))
+            rowmats[g] = (mat, gcols)
 
     bindings: dict[str, Binding] = {}
     for c in cols:
         cdef = t.schema.col(c)
         if cdef.kind in (ColKind.INT, ColKind.FLOAT, ColKind.DATE):
-            if rowmat is not None:
-                j = rowcols.index(c)
-                arr = rowmat[:, j]
-                if cdef.kind != ColKind.FLOAT:
-                    arr = arr.astype(np.int32)
+            g = "float" if cdef.kind == ColKind.FLOAT else "int"
+            if g in rowmats:
+                mat, gcols = rowmats[g]
+                arr = mat[:, gcols.index(c)]
             else:
                 arr = reg(f"col/{c}", lambda c=c: t.data[c])
                 if perm is not None:

@@ -22,6 +22,16 @@ Two modes:
              entry serves every binding.
   specialize — all params are baked in as literals (the paper's fully
              specialized program); each distinct binding is its own entry.
+
+Tiered mode (`PlanCache(..., tiered=True)`, docs §11) changes what a
+cold request costs: `get_tiered` returns the best *ready* rung of the
+execution-tier ladder immediately — on a stone-cold shape that is the
+Volcano oracle, constructed in microseconds — while a bounded background
+thread compiles the target tier and hot-swaps the entry.  Promotion is
+deduplicated per key, a failed target compile falls back (typed, sticky)
+to the ready tier, and `CacheStats.tier_hits/promotions` expose the
+climb.  `save`/`load` persist the feedback store + warm metadata
+(`core/persist.py`) so a restarted process re-plans nothing.
 """
 from __future__ import annotations
 
@@ -30,16 +40,20 @@ import dataclasses
 import threading
 import weakref
 from collections import OrderedDict
-from typing import Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core import compile as compile_mod
 from repro.core import ir
+from repro.core import persist as persist_mod
+from repro.core import tiering
 from repro.core.compile import CompiledQuery
 from repro.core.passes.compaction import observed_bucket
 from repro.core.passes.param_binding import bind_plan, plan_params
 from repro.core.passes.pipeline import Settings, optimize
+from repro.core.volcano import OracleQuery
 
 
 def _mesh_size(settings: Settings) -> int:
@@ -82,6 +96,14 @@ class CacheStats:
     # Degraded settings key distinct cache entries, so a degraded rung
     # never evicts or pollutes the full-fidelity entry for the same plan.
     degraded: int = 0
+    # execution tiering (core/tiering.py, tiered mode only): requests
+    # served per ladder rung, background hot-swaps to a higher tier, and
+    # promotions that failed (the entry stayed on its ready tier).
+    tier_hits: dict = dataclasses.field(default_factory=dict)
+    promotions: int = 0
+    promote_failures: int = 0
+    # feedback records restored from a persisted warm state (persist.py)
+    restored: int = 0
 
 
 @dataclasses.dataclass
@@ -106,11 +128,46 @@ class _Feedback:
     gen: int = 0
 
 
+@dataclasses.dataclass
+class _LadderState:
+    """Per-cold-plan-key promotion state (tiered mode).  `ready` maps
+    tier name -> Runnable, always containing at least the oracle; `plan`
+    is a pristine structurally-bound logical plan the promoter compiles
+    from (each compile deep-copies it — passes mutate plans)."""
+    plan: ir.Plan
+    runtime: dict
+    ladder: tiering.TierLadder
+    ready: dict = dataclasses.field(default_factory=dict)
+    promoting: bool = False
+    failure: Optional[BaseException] = None     # sticky: promotion gave up
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    def best(self) -> tiering.Runnable:
+        return self.ready[max(self.ready,
+                              key=lambda n: tiering.tier(n).rank)]
+
+
 class PlanCache:
-    def __init__(self, db, max_entries: int = 128):
+    def __init__(self, db, max_entries: int = 128, *,
+                 tiered: bool = False, promote_through: bool = False,
+                 promote_workers: int = 1):
         self.db = db
         self.max_entries = max_entries
         self.stats = CacheStats()
+        # execution tiering (docs §11): serve the best ready rung, climb
+        # in the background.  `promote_through` climbs rung-by-rung (an
+        # interpret-tier program lands before the full compile) at the
+        # cost of one extra compile; default is straight to the target.
+        self.tiered = tiered
+        self.promote_through = promote_through
+        self._promote_workers = max(1, promote_workers)
+        self._promoter: Optional[ThreadPoolExecutor] = None
+        self._ladders: dict[tuple, _LadderState] = {}
+        # persisted warm metadata (persist.load_warm_state): key bases
+        # that had a compiled entry when the state was saved.  `is_warm`
+        # lets a restarted server prioritize known-hot shapes.
+        self._warm_hints: set[tuple] = set()
         self._entries: "OrderedDict[tuple, CompiledQuery]" = OrderedDict()
         # last-observed n_batch_traces / n_overflows per live entry (weak:
         # evicted entries must not pin their compiled programs in memory)
@@ -259,14 +316,21 @@ class PlanCache:
 
     # -- the cache -------------------------------------------------------------
     def _get_prepared(self, key: tuple, plan: ir.Plan, runtime: dict,
-                      owned: bool, settings: Settings) -> CompiledQuery:
+                      owned: bool, settings: Settings,
+                      _quiet: bool = False) -> CompiledQuery:
+        # `_quiet` suppresses hit/miss accounting (NOT the compile
+        # counter): the tiered promoter compiles through here after the
+        # ladder already counted the request, and double-counting would
+        # desync hits+misses from the request count.
         with self._lock:
             cq = self._entries.get(key)
             if cq is not None:
                 self._entries.move_to_end(key)
-                self.stats.hits += 1
+                if not _quiet:
+                    self.stats.hits += 1
                 return cq
-            self.stats.misses += 1
+            if not _quiet:
+                self.stats.misses += 1
         # compile outside the lock (long); concurrent duplicate compiles are
         # prevented one level up by QueryServer's in-flight dedup.  Passes
         # mutate the plan, so compile from a private copy.  Estimation
@@ -314,6 +378,210 @@ class PlanCache:
         res = cq.run(runtime)
         self._note_compaction(cq, 1)
         return res
+
+    # -- execution tiers (core/tiering.py; docs §11) ---------------------------
+    def get_tiered(self, plan: ir.Plan, settings: Settings,
+                   bindings: Optional[dict] = None, mode: str = "residual"
+                   ) -> tuple[tiering.Runnable, dict, str]:
+        """(runnable, runtime bindings, tier name): the best READY tier
+        for this request, immediately.  A warm target entry behaves
+        exactly like `get`; a cold shape is served by the ladder's bottom
+        rung (the Volcano oracle — no staging, no JIT) while a background
+        thread compiles the target tier and hot-swaps the entry.  Any
+        tier satisfies the same Runnable contract, so callers execute the
+        result identically regardless of rung."""
+        key, prepared, runtime, owned = self._prepare(plan, settings,
+                                                      bindings, mode)
+        return self._get_tiered_prepared(key, prepared, runtime, owned,
+                                         settings)
+
+    def _get_tiered_prepared(self, key: tuple, plan: ir.Plan,
+                             runtime: dict, owned: bool, settings: Settings,
+                             compile_hook: Optional[Callable] = None
+                             ) -> tuple[tiering.Runnable, dict, str]:
+        ladder = tiering.TierLadder(settings)
+        with self._lock:
+            cq = self._entries.get(key)
+            if cq is not None:
+                # target tier ready: the classic warm hit
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                self._tier_hit(ladder.target.name)
+                return cq, runtime, ladder.target.name
+            st = self._ladders.get(key)
+            if st is None:
+                if len(self._ladders) >= 4 * self.max_entries:
+                    # bound the cold-state table; in-flight promotions
+                    # keep their state (the job holds its own reference)
+                    self._ladders = {k: s for k, s in self._ladders.items()
+                                     if s.promoting}
+                st = _LadderState(plan if owned else copy.deepcopy(plan),
+                                  dict(runtime), ladder)
+                self._ladders[key] = st
+                self.stats.misses += 1
+            else:
+                self.stats.hits += 1
+        if ladder.target is tiering.ORACLE:
+            # volcano-engine settings: the ladder is one rung, nothing to
+            # promote toward
+            run = self._ensure_oracle(st)
+            st.done.set()
+            self._tier_hit(run.tier_name)
+            return run, runtime, run.tier_name
+        self._ensure_oracle(st)
+        self._maybe_promote(key, st, settings, compile_hook)
+        with self._lock:
+            best = st.best()
+        self._tier_hit(best.tier_name)
+        return best, runtime, best.tier_name
+
+    def _tier_hit(self, name: str) -> None:
+        with self._lock:
+            self.stats.tier_hits[name] = self.stats.tier_hits.get(name, 0) + 1
+
+    def _ensure_oracle(self, st: _LadderState) -> tiering.Runnable:
+        """The ladder's always-ready bottom rung, built at most once per
+        state.  Construction is microseconds (no staging), so racing
+        builders waste nothing; the first to publish wins."""
+        with self._lock:
+            got = st.ready.get(tiering.ORACLE.name)
+            if got is not None:
+                return got
+        oq = OracleQuery(st.plan, self.db, params=st.runtime)
+        with self._lock:
+            return st.ready.setdefault(tiering.ORACLE.name, oq)
+
+    def _maybe_promote(self, key: tuple, st: _LadderState,
+                       settings: Settings,
+                       compile_hook: Optional[Callable]) -> None:
+        """Schedule one background promotion toward the target tier.
+        Deduplicated per key (`st.promoting`); a sticky failure stops the
+        climb for this state — the ready tier keeps serving, and a later
+        eviction/re-key starts a fresh ladder."""
+        with self._lock:
+            if st.promoting or st.failure is not None or st.done.is_set():
+                return
+            st.promoting = True
+            if self._promoter is None:
+                self._promoter = ThreadPoolExecutor(
+                    max_workers=self._promote_workers,
+                    thread_name_prefix="plan-cache-promote")
+            pool = self._promoter
+        try:
+            pool.submit(self._promote, key, st, settings, compile_hook)
+        except RuntimeError as e:      # pool shut down (cache closed)
+            with self._lock:
+                st.promoting = False
+                st.failure = e
+                st.done.set()
+
+    def _promote(self, key: tuple, st: _LadderState, settings: Settings,
+                 compile_hook: Optional[Callable]) -> None:
+        """Background promotion job: compile the rung(s) above the best
+        ready tier and hot-swap each into the ladder as it lands.  The
+        target tier also becomes the canonical `_entries[key]` entry, so
+        every later request takes the plain warm-hit path."""
+        ladder = st.ladder
+        try:
+            with self._lock:
+                ready = tiering.tier(st.best().tier_name)
+            for t in ladder.promotion_path(ready, self.promote_through):
+                if compile_hook is not None:
+                    compile_hook(key)
+                if t is ladder.target:
+                    cq = self._get_prepared(key, copy.deepcopy(st.plan),
+                                            st.runtime, True, settings,
+                                            _quiet=True)
+                else:
+                    # intermediate rung (interpret): a cheaper program
+                    # under the tier's settings.  It lives only in the
+                    # ladder — its settings differ from the request's, so
+                    # it must never be keyed as the target entry.
+                    cq = CompiledQuery(copy.deepcopy(st.plan), self.db,
+                                       ladder.settings_for(t),
+                                       params=st.runtime)
+                    cq.tier_name = t.name
+                    with self._lock:
+                        self.stats.compiles += 1
+                with self._lock:
+                    st.ready[t.name] = cq
+                    self.stats.promotions += 1
+            with self._lock:
+                st.promoting = False
+                st.done.set()
+                # fully promoted: requests now hit _entries directly and
+                # the cold-state record has done its job
+                if self._ladders.get(key) is st:
+                    del self._ladders[key]
+        except BaseException as e:
+            with self._lock:
+                st.promoting = False
+                st.failure = e
+                st.done.set()
+                self.stats.promote_failures += 1
+
+    def await_promotion(self, plan: ir.Plan, settings: Settings,
+                        bindings: Optional[dict] = None,
+                        mode: str = "residual",
+                        timeout: Optional[float] = None) -> bool:
+        """Block until the background promotion for this request's key
+        settles (hot-swap complete or failed); True when the target tier
+        is ready.  Deterministic handle for tests and benchmarks — the
+        serving path never needs it."""
+        key = self.key_for(plan, settings, bindings, mode)
+        with self._lock:
+            if key in self._entries:
+                return True
+            st = self._ladders.get(key)
+        if st is None:
+            return self.contains(key)
+        st.done.wait(timeout)
+        return self.contains(key)
+
+    def execute_tiered(self, plan: ir.Plan, settings: Settings,
+                       bindings: Optional[dict] = None,
+                       mode: str = "residual"):
+        """(result, tier name): `execute` through the tier ladder."""
+        run, runtime, tier_name = self.get_tiered(plan, settings, bindings,
+                                                  mode)
+        res = run.run(runtime)
+        self._note_compaction(run, 1)
+        return res, tier_name
+
+    def is_warm(self, plan: ir.Plan, settings: Settings,
+                bindings: Optional[dict] = None,
+                mode: str = "residual") -> bool:
+        """True when this request's shape had a compiled entry in a
+        previously persisted warm state (or has one live right now) — a
+        restarted server's signal for which shapes to promote eagerly."""
+        key = self.key_for(plan, settings, bindings, mode)
+        with self._lock:
+            return key in self._entries or key[:-1] in self._warm_hints
+
+    # -- persistence (core/persist.py; docs §11) -------------------------------
+    def save(self, path: str) -> int:
+        """Persist the feedback store + warm metadata; returns records
+        written.  Pair with the JAX persistent compilation cache
+        (`persist.enable_compilation_cache`) so the XLA executables
+        survive too."""
+        return persist_mod.save_warm_state(self, path)
+
+    def load(self, path: str) -> int:
+        """Restore a persisted warm state; returns records restored (0 =
+        cold start: missing/corrupt/version-skewed/different-data files
+        are silently ignored).  Restored capacity overrides flow into the
+        first compile of each shape, so request 1 runs at the
+        pre-restart converged capacities — no re-convergence overflows."""
+        return persist_mod.load_warm_state(self, path)
+
+    def close(self) -> None:
+        """Stop the background promoter (if any).  In-flight compiles are
+        abandoned to finish on their own thread; no new promotions start.
+        Idempotent, and a no-op for never-tiered caches."""
+        with self._lock:
+            pool, self._promoter = self._promoter, None
+        if pool is not None:
+            pool.shutdown(wait=False)
 
     def _note_compaction(self, cq: CompiledQuery, n_execs: int) -> None:
         """Compaction accounting for `n_execs` executions just performed on
@@ -435,7 +703,8 @@ class PlanCache:
             if cq.n_batch_traces > seen:
                 self.stats.batch_traces += cq.n_batch_traces - seen
                 self._batch_trace_seen[cq] = cq.n_batch_traces
-            if cq.param_spec and runtime_list:
+            if cq.param_spec and runtime_list \
+                    and getattr(cq, "pads_batches", True):
                 self.stats.padded_slots += \
                     compile_mod.bucket_size(len(runtime_list)) \
                     - len(runtime_list)

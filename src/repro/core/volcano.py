@@ -8,9 +8,15 @@ specialization, no query-specific knowledge.  Deliberately the world the
 paper's Figure 1 puts at the productive-but-slow corner.
 
 It is also the correctness oracle for the staged engine (independent code
-path, compaction instead of masking).
+path, compaction instead of masking), and — wrapped in `OracleQuery` —
+the zero-compile-cost bottom rung of the execution-tier ladder
+(`core/tiering.py`): a cold plan is servable the instant it exists, at
+interpreter speed, while the compiled tiers build in the background.
 """
 from __future__ import annotations
+
+import threading
+from typing import Optional
 
 import numpy as np
 
@@ -270,6 +276,97 @@ class VolcanoEngine:
             return rel.take(np.arange(min(n, rel.nrows)))
 
         raise TypeError(type(p))
+
+
+class OracleQuery:
+    """The Volcano engine behind the `CompiledQuery` contract (a
+    `tiering.Runnable`): `run`/`run_many` with identical binding
+    validation, plus the staged-outputs observation surface (all empty —
+    the interpreter compacts by materializing, so it has no capacity
+    points, overflows, or traces to report).  Construction performs no
+    staging and no compilation: this is the tier ladder's always-ready
+    bottom rung, built once per cold plan shape by the tiered PlanCache.
+
+    The plan must have compile-time (structural) parameters already
+    substituted, exactly like CompiledQuery — `PlanCache._prepare` does
+    that for both."""
+
+    tier_name = "oracle"
+    # PlanCache.run_many accounting: this tier executes slot-at-a-time,
+    # so power-of-two bucket padding never happens and pad slots must not
+    # be counted against it.
+    pads_batches = False
+
+    def __init__(self, plan: ir.Plan, db: Database,
+                 params: Optional[dict] = None):
+        from repro.core.passes.param_binding import plan_params
+
+        self.db = db
+        self.plan = plan
+        spec = plan_params(plan)
+        structural = sorted(n for n, i in spec.items() if i.structural)
+        if structural:
+            raise TypeError(
+                f"compile-time parameters {structural} are unresolved; "
+                "bind them via PlanCache or bind_plan before OracleQuery")
+        self.param_spec: dict[str, str] = {n: i.dtype
+                                           for n, i in spec.items()}
+        self.param_defaults = {n: (params or {})[n] for n in self.param_spec
+                               if n in (params or {})}
+        missing = sorted(set(self.param_spec) - set(self.param_defaults))
+        if missing:
+            raise KeyError(f"no binding supplied for parameters {missing}")
+        self._engine = VolcanoEngine(db)
+        # staged-outputs contract, vacuously satisfied: zero compaction /
+        # measure points, nothing to overflow, no traces.  PlanCache's
+        # compaction accounting and feedback harvesting read these and
+        # skip the tier naturally (no isinstance checks anywhere).
+        self.compaction_points = 0
+        self.measure_points = 0
+        self.capacities: tuple = ()
+        self.point_caps: dict[str, int] = {}
+        self.translate_points: set[str] = set()
+        self.n_overflows = 0
+        self.n_traces = 0
+        self.n_batch_traces = 0
+        self.n_executions = 0
+        self.pass_time = 0.0
+        self.stage_time = 0.0
+        self._obs_lock = threading.Lock()
+        self.observed_max: dict[str, int] = {}
+        self.observed_shard: dict[str, np.ndarray] = {}
+        self.under_streak = 0
+        self.streak_max: dict[str, int] = {}
+        self._cache_key: Optional[tuple] = None
+
+    def _check_bindings(self, params: Optional[dict]) -> dict:
+        """Same semantics as CompiledQuery._check_bindings: None means the
+        construction-time defaults; a dict must name every runtime
+        parameter (a partial dict would silently mix two requests)."""
+        if params is None:
+            return self.param_defaults
+        unknown = sorted(set(params) - set(self.param_spec))
+        if unknown:
+            raise KeyError(f"unknown parameters {unknown}; this plan "
+                           f"takes {sorted(self.param_spec)}")
+        missing = sorted(set(self.param_spec) - set(params))
+        if missing:
+            raise KeyError(f"no binding supplied for parameters "
+                           f"{missing}")
+        return params
+
+    def run(self, params: Optional[dict] = None) -> dict[str, np.ndarray]:
+        bound = self._check_bindings(params)
+        self.n_executions += 1
+        return self._engine.execute(self.plan, bound)
+
+    def run_many(self, bindings_list) -> list[dict[str, np.ndarray]]:
+        """One interpreted execution per binding (no vmap at this tier);
+        validates every binding up front so a bad one fails the call
+        before any slot executes, like the batched staged program."""
+        bound = [self._check_bindings(b) for b in bindings_list]
+        return [self.run(b if b is not self.param_defaults else None)
+                for b in bound]
 
 
 def _scalar_agg(fn: str, v, n: int):

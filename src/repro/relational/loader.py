@@ -48,6 +48,7 @@ _FINGERPRINTS = itertools.count()
 class Database:
     def __init__(self, tables: dict[str, Table]):
         self.fingerprint: int = next(_FINGERPRINTS)
+        self._content_fp: Optional[str] = None
         self.tables = tables
         self._fk_csr: dict[tuple[str, str], tuple[np.ndarray, np.ndarray]] = {}
         self._date_cluster: dict[tuple[str, str], tuple[np.ndarray, np.ndarray]] = {}
@@ -73,9 +74,39 @@ class Database:
         entries AND stale memoized capacity vectors can never be served
         against the new data."""
         self.fingerprint = next(_FINGERPRINTS)
+        self._content_fp = None
         self.tables = tables
         self._device_cols.clear()
         self.reset_aux()
+
+    def content_fingerprint(self) -> str:
+        """Stable digest of the loaded data, for state that outlives the
+        process.  `fingerprint` is a process-local monotonic counter —
+        perfect for in-memory cache keys, useless on disk — so persisted
+        warm state (`core/persist.py`) is keyed by THIS: a sha256 over
+        every table's name, schema, shape, and a strided content sample
+        of each column.  A restarted process that loads the same data
+        (same generator, same sf/seed) computes the same digest and
+        adopts the saved state; different data silently cold-starts.
+        Sampling keeps it cheap (~64 probes per column) while still
+        catching scale, seed, or schema changes — it is a warm-state
+        admission check, not a cryptographic data integrity guarantee."""
+        if self._content_fp is None:
+            import hashlib
+
+            h = hashlib.sha256()
+            for name in sorted(self.tables):
+                t = self.tables[name]
+                h.update(f"{name}:{t.nrows}".encode())
+                for cdef in t.schema.columns:
+                    arr = t.data[cdef.name]
+                    h.update(f"{cdef.name}:{cdef.kind.value}"
+                             f":{arr.dtype}:{arr.shape}".encode())
+                    if arr.size:
+                        step = max(1, arr.shape[0] // 64)
+                        h.update(np.ascontiguousarray(arr[::step]).tobytes())
+            self._content_fp = h.hexdigest()[:16]
+        return self._content_fp
 
     # -- physical co-partitioning (§3.2.1 over a device mesh) ----------------
     def shard_plan(self, n: int) -> "ShardPlan":

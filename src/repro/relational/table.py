@@ -1,8 +1,10 @@
 """Columnar table storage (host-side numpy) + per-column statistics.
 
 Physical representation (this is the *record-of-arrays* / column layout of
-paper §3.3 — the row-layout AoS variant used by the layout experiment lives
-in `repro.core.layout_rows`):
+paper §3.3 — the row-layout AoS variant used by the layout experiment is
+built at staging time by `repro.core.operators.scan` under
+`Settings(layout="row")`: per-dtype-group record matrices behind an
+optimization barrier):
 
   INT/DATE  -> int32[n]
   FLOAT     -> float32[n]

@@ -35,15 +35,27 @@ Overload hardening (docs/architecture.md §10):
     against the same compiled entry (restore-and-replay, mirroring
     `runtime/fault_tolerance.py`; the window's request list is the
     checkpoint and execution never mutates it);
-  * a degradation ladder keyed off the admission load: first shed to
-    smaller coalescing buckets (lower latency, less batching), then to
-    degraded mask-only cached plans (`pipeline.degrade`: same results,
-    no compaction machinery — a distinct, cheaper plan-cache entry),
-    and only then reject;
+  * a degradation ladder keyed off the admission load, expressed as
+    *tier demotion* over the same `core.tiering.TierLadder` the plan
+    cache promotes along (docs §11): first shed to smaller coalescing
+    buckets (lower latency, less batching), then demote the execution
+    tier to the ladder's interpret rung (mask-only settings — same
+    results, no compaction machinery, a distinct cheaper plan-cache
+    entry), and only then reject;
   * chaos seams — `compile_hook(key)` fires in the owning group just
     before a cold compile, `exec_hook(key, attempt)` before every
     execution attempt; `serve/chaos.py` drives both from a seeded
     schedule.
+
+Tiered serving (opt-in, `tiered=True`; docs §11): a cold plan shape is
+served immediately from the best *ready* execution tier — the Volcano
+oracle on request 1 — while the cache's background promoter compiles the
+target tier and hot-swaps it in; no request ever blocks on XLA
+compilation.  `warm_state_path` persists the compaction feedback store
+and warm metadata on `close()` and restores them at construction, so a
+restarted server answers request 1 at the pre-restart converged
+capacities (pair with `persist.enable_compilation_cache` to also reuse
+the XLA executables themselves).
 
 Two driving styles:
 
@@ -61,8 +73,8 @@ from concurrent.futures import (Future, InvalidStateError,
                                 ThreadPoolExecutor, wait)
 from typing import Callable, Optional
 
-from repro.core import ir
-from repro.core.passes.pipeline import Settings, degrade, preset
+from repro.core import ir, tiering
+from repro.core.passes.pipeline import Settings, preset
 from repro.core.plan_cache import PlanCache
 from repro.serve.admission import (AdmissionController, DeadlineExceeded,
                                    LatencyHistogram, Overloaded, RateEMA,
@@ -90,6 +102,9 @@ class ServerStats:
     shed_plan: int = 0         # requests served via degraded mask-only plans
     retries: int = 0           # group replays after a TransientError
     deadline_misses: int = 0   # requests failed with DeadlineExceeded
+    # tiered serving: dispatched groups by the execution tier that
+    # actually served them (empty unless tiered=True)
+    tier_served: dict = dataclasses.field(default_factory=dict)
     # adaptive capacity feedback, passed through from the shared
     # PlanCache after each group (re-plans from observed overflows,
     # shrinks from sustained underuse — see CacheStats)
@@ -141,10 +156,14 @@ class QueryServer:
                  shed_batch_load: float = 0.5, shed_plan_load: float = 0.75,
                  default_timeout_s: Optional[float] = None,
                  max_retries: int = 1, retry_backoff_s: float = 0.02,
-                 close_timeout_s: float = 60.0):
+                 close_timeout_s: float = 60.0,
+                 tiered: bool = False,
+                 warm_state_path: Optional[str] = None):
         self.db = db
         self.settings = settings or preset("opt")
-        self.cache = cache or PlanCache(db)
+        self.tiered = tiered
+        self.warm_state_path = warm_state_path
+        self.cache = cache or PlanCache(db, tiered=tiered)
         self.stats = ServerStats()
         self.compile_hook = compile_hook   # chaos seam: pre-cold-compile
         self.exec_hook = exec_hook         # chaos seam: pre-execution
@@ -160,7 +179,20 @@ class QueryServer:
         self.max_retries = max_retries
         self.retry_backoff_s = retry_backoff_s
         self.close_timeout_s = close_timeout_s
-        self._degraded_settings = degrade(self.settings)
+        # the SAME ladder object the plan cache promotes along: overload
+        # demotes the serving tier one rung below the target (the
+        # interpret/mask-only rung for compiled targets), so degradation
+        # and promotion are two directions over one abstraction.
+        self.ladder = tiering.TierLadder(self.settings)
+        if self.ladder.target.rank > tiering.INTERPRET.rank:
+            self._degraded_settings = \
+                self.ladder.settings_for(tiering.INTERPRET)
+        else:
+            # interpret-or-lower target: there is no cheaper tier worth
+            # demoting to, rung 2 degenerates to the base settings
+            self._degraded_settings = self.settings
+        if warm_state_path is not None:
+            self.cache.load(warm_state_path)
         self._arrivals = RateEMA()
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="query-server")
@@ -250,6 +282,24 @@ class QueryServer:
         for key, w in popped:
             self._dispatch(key, w)
 
+    def prewarm(self, requests) -> int:
+        """Eagerly warm the cache for (plan, bindings) shapes a previous
+        process knew to be hot (restored via `warm_state_path`); returns
+        the number of shapes warmed.  Tiered servers kick the background
+        promoter and return immediately; non-tiered servers compile
+        synchronously.  Shapes with no warm hint are skipped — prewarm
+        never compiles speculatively."""
+        n = 0
+        for plan, bindings in requests:
+            if not self.cache.is_warm(plan, self.settings, bindings):
+                continue
+            if self.tiered:
+                self.cache.get_tiered(plan, self.settings, bindings)
+            else:
+                self.cache.get(plan, self.settings, bindings)
+            n += 1
+        return n
+
     def drain(self) -> None:
         """Flush partial windows and wait for every outstanding request —
         traffic stopping mid-tick must never leave a future hanging."""
@@ -323,6 +373,15 @@ class QueryServer:
             if self._settle(f, exc=exc) == "done":
                 with self._lock:
                     self.stats.grace_expired += 1
+        # persist warm state last, after every group has executed and fed
+        # the compaction feedback store; a failed save must not turn a
+        # clean shutdown into a crash (next start is simply cold).
+        if self.warm_state_path is not None:
+            try:
+                self.cache.save(self.warm_state_path)
+            except OSError:
+                pass
+        self.cache.close()
 
     def __enter__(self):
         return self
@@ -508,7 +567,19 @@ class QueryServer:
         attempt = 0
         while True:
             try:
-                cq = self._resolve_compiled(key, window, entries[0].runtime)
+                if self.tiered:
+                    # never block a request on XLA compilation: serve the
+                    # best READY tier now, promotion happens off-thread
+                    # (retries naturally pick up a freshly promoted tier)
+                    cq = self.cache._get_tiered_prepared(
+                        key, window.plan, entries[0].runtime, window.owned,
+                        window.settings, compile_hook=self.compile_hook)[0]
+                    with self._lock:
+                        self.stats.tier_served[cq.tier_name] = \
+                            self.stats.tier_served.get(cq.tier_name, 0) + 1
+                else:
+                    cq = self._resolve_compiled(key, window,
+                                                entries[0].runtime)
                 if self.exec_hook is not None:
                     self.exec_hook(key, attempt)
                 runtimes = [e.runtime for e in entries]
